@@ -1,0 +1,64 @@
+"""Shared benchmark helpers: the paper's experimental setup in one place."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import NoC, partition_model  # noqa: E402
+from repro.core.placement import optimize_placement  # noqa: E402
+from repro.core.placement.ppo import PPOConfig  # noqa: E402
+from repro.snn import (profile_model, spike_resnet18, spike_resnet50,  # noqa: E402
+                       spike_vgg16)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# Paper §5.1 simulator platform: many-core near-memory chip.
+CORE_FLOPS = 25.6e9          # 16x16 MAC @ 100 MHz FP16 (per core)
+LINK_BW = 8e9                # NoC link bytes/s
+HOP_LAT = 2e-8
+
+SPIKE_MODELS = {
+    "S-ResNet18": lambda: spike_resnet18(n_classes=10, in_res=32, T=4),
+    "S-VGG16": lambda: spike_vgg16(n_classes=10, in_res=32, T=4),
+    "S-ResNet50": lambda: spike_resnet50(n_classes=10, in_res=32, T=4),
+}
+
+
+def make_noc(n_cores: int) -> NoC:
+    rows = {32: 4, 64: 8}[n_cores]
+    cols = n_cores // rows
+    return NoC(rows, cols, torus=False, link_bw=LINK_BW,
+               core_flops=CORE_FLOPS, hop_latency=HOP_LAT)
+
+
+def model_graph(name: str, n_cores: int, training: bool = True, batch: int = 8):
+    cfg = SPIKE_MODELS[name]()
+    prof = profile_model(cfg, batch=batch, training=training)
+    part = partition_model(prof, n_cores, "balanced")
+    return part.to_graph(), part
+
+
+def placement_suite(graph, noc, methods=("zigzag", "sigmate", "random_search",
+                                         "ppo"), seed=0, ppo_iters=30,
+                    ppo_batch=64, rs_budget=1500):
+    rows = {}
+    for m in methods:
+        kw = {}
+        if m == "ppo":
+            kw["cfg"] = PPOConfig(batch_size=ppo_batch, iterations=ppo_iters,
+                                  ppo_epochs=4, entropy_coef=3e-3, seed=seed)
+        if m == "random_search":
+            kw["budget"] = rs_budget
+        if m == "simulated_annealing":
+            kw["budget"] = 4000
+        rows[m] = optimize_placement(graph, noc, method=m, seed=seed, **kw)
+    return rows
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

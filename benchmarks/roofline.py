@@ -1,0 +1,66 @@
+"""§Roofline report generator: reads results/dryrun/*.json, prints the
+per-(arch × shape × mesh) three-term roofline table (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import RESULTS_DIR
+
+
+def load_records(mesh: str | None = "pod", tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun",
+                                              "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline():
+    rows = []
+    for r in load_records("pod"):
+        if not r.get("ok"):
+            rows.append((f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                         f"FAILED {r.get('error','')[:80]}"))
+            continue
+        t = r["roofline"]
+        rows.append((
+            f"roofline.{r['arch']}.{r['shape']}", r.get("compile_s", 0) * 1e6,
+            f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+            f"collective={t['collective_s']:.4f}s dom={t['dominant']} "
+            f"frac={t['roofline_fraction']:.4f} "
+            f"useful={t['useful_flops_ratio']:.3f} "
+            f"mem/dev={r['memory']['peak_bytes_per_device']/2**30:.2f}GiB"))
+    if not rows:
+        rows.append(("roofline.missing", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+    return rows
+
+
+def table(records=None):
+    """Markdown table for EXPERIMENTS.md."""
+    records = records if records is not None else load_records("pod")
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | "
+                         f"— | — | — |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{t['useful_flops_ratio']:.3f} | "
+            f"{t['roofline_fraction']:.4f} | "
+            f"{r['memory']['peak_bytes_per_device']/2**30:.1f} |")
+    return "\n".join(lines)

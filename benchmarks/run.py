@@ -1,0 +1,52 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower placement sweeps")
+    args = ap.parse_args()
+
+    from . import paper_figs, roofline, spike_kernel, tpu_placement
+
+    benches = [
+        ("table1", paper_figs.table1_eer),
+        ("fig4", paper_figs.fig4_partition),
+        ("fig9", paper_figs.fig9_pipeline),
+        ("spike_kernel", spike_kernel.spike_kernel),
+        ("roofline", roofline.roofline),
+        ("fig6", paper_figs.fig6_placement_32),
+        ("fig7_11", paper_figs.hotspots),
+        ("fig10", paper_figs.fig10_vs_policy),
+        ("fig8", paper_figs.fig8_placement_64),
+        ("tpu_placement", tpu_placement.tpu_placement),
+    ]
+    fast_skip = {"fig8"}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        if args.fast and name in fast_skip:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            for (rname, us, derived) in rows:
+                print(f"{rname},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
+        sys.stderr.write(f"[bench {name}: {time.time()-t0:.1f}s]\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

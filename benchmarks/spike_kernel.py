@@ -1,0 +1,63 @@
+"""Event-driven spike-matmul kernel: when does tile-level skipping pay?
+
+Hardware-adaptation finding (recorded in DESIGN.md §2/§7): with *uniform-random*
+spikes at the paper's densities, the probability that a whole MXU tile
+(128×128, or even 8×128) is all-zero is ~0 — synapse-granular event skipping
+(the paper's selector+adder FP engine) does NOT transfer to tile-granular MXU
+skipping. It DOES pay under *structured* sparsity: silent channels / dead
+feature maps zero out contiguous k-columns of the im2col matrix. Both regimes
+are measured below; the structured case uses channel-major im2col layout with
+blocks aligned to channel groups.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _skip_fraction(spikes, bm, bk):
+    m, k = spikes.shape
+    m2, k2 = m - m % bm, k - k % bk
+    blocks = spikes[:m2, :k2].reshape(m2 // bm, bm, k2 // bk, bk).any(
+        axis=(1, 3))
+    return 1.0 - blocks.mean()
+
+
+def spike_kernel():
+    rows = []
+    rng = np.random.default_rng(0)
+    # conv3 of S-ResNet18: im2col lhs [B*H*W, Cin*9], channel-major features
+    m, cin, kk = 4096, 128, 9
+    k = cin * kk
+    for density in (0.05, 0.15):
+        sp = rng.random((m, k)) < density             # uniform-random spikes
+        frac_u = _skip_fraction(sp, 8, 128)
+        rows.append((
+            f"spike_kernel.uniform.d{density}", 0.0,
+            f"skipped_8x128_tiles={100*frac_u:.1f}% (uniform spikes do NOT "
+            f"zero tiles - negative result, see DESIGN.md)"))
+    for silent in (0.5, 0.75, 0.9):
+        active = rng.random(cin) >= silent            # structured: dead channels
+        sp = (rng.random((m, k)) < 0.3) & np.repeat(active, kk)[None, :]
+        # blocks aligned to channel groups: bk = 9*16 columns = 16 channels
+        frac_s = _skip_fraction(sp, 128, kk * 16)
+        rows.append((
+            f"spike_kernel.structured.silent{silent}", 0.0,
+            f"skipped_128x144_tiles={100*frac_s:.1f}% -> MXU passes x"
+            f"{1/(1-frac_s+1e-9):.2f} fewer (channel-aligned blocks)"))
+    # interpret-mode correctness+timing point
+    from repro.kernels import ops, ref
+    sp = (jax.random.uniform(jax.random.PRNGKey(0), (256, 256)) < 0.1
+          ).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    out = ops.spike_matmul(sp, w)                # compile+run once
+    t0 = time.time()
+    out = ops.spike_matmul(sp, w).block_until_ready()
+    us = (time.time() - t0) * 1e6
+    err = float(jnp.abs(out - ref.spike_matmul_ref(sp, w)).max())
+    rows.append(("spike_kernel.interpret.256x256x128", us,
+                 f"max_err={err:.2e} (interpret-mode on CPU)"))
+    return rows

@@ -1,0 +1,81 @@
+"""TPU adaptation benchmark: placement-optimized device ordering for a pod.
+
+Builds the device-level collective traffic graph of representative parallelism
+mixes (DP ring + TP ring + MoE all-to-all, per-step bytes from the dry-run
+artifacts when present, else analytic estimates), scores the default row-major
+`make_mesh` assignment on the 16x16 ICI torus, then lets the paper's optimizer
+reorder devices. Reported: hop-weighted ICI bytes + hottest link.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from .common import RESULTS_DIR, timed
+from repro.core import tpu_adapter as T
+
+
+def _traffic_from_dryrun(arch: str, shape: str):
+    path = os.path.join(RESULTS_DIR, "dryrun",
+                        f"{arch}__{shape}__pod.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return None
+    by_kind = rec["collectives"]["by_kind"]
+    ring = sum(v["wire_bytes"] for k, v in by_kind.items()
+               if k in ("all-reduce", "all-gather", "reduce-scatter"))
+    a2a = sum(v["wire_bytes"] for k, v in by_kind.items()
+              if k == "all-to-all")
+    return ring, a2a
+
+
+def tpu_placement():
+    rows = []
+    cases = [
+        ("qwen3-moe-30b-a3b", "train_4k"),      # EP all-to-all heavy
+        ("internlm2-1.8b", "train_4k"),         # TP+DP ring heavy
+    ]
+    mesh_shape = (16, 16)
+    noc = T.pod_noc(16, 16)
+    for arch, shape in cases:
+        tr = _traffic_from_dryrun(arch, shape)
+        if tr is None:
+            ring, a2a = 8e9, 2e9                # analytic fallback
+        else:
+            ring, a2a = tr
+        # split ring bytes between the two mesh axes (data-axis grads +
+        # model-axis activations) — a 50/50 split is representative
+        graph = T.collective_traffic_graph(
+            mesh_shape, {0: ring * 0.5, 1: ring * 0.5},
+            {1: a2a} if a2a else None)
+        base = T.ici_cost(graph, noc)
+        (out, us) = timed(T.optimize_device_order, graph, noc,
+                          method="simulated_annealing", budget=4000)
+        _, res = out
+        rows.append((
+            f"tpu_placement.{arch}.row_major", us,
+            f"default_cost={base['comm_cost']:.3e} "
+            f"optimized={res.comm_cost:.3e} "
+            f"red={100*(1-res.comm_cost/max(base['comm_cost'],1e-12)):.1f}% "
+            f"(row-major rings embed at hop-1: default already optimal)"))
+        # realistic failure mode: multi-host enumeration scrambles device
+        # order; the placement optimizer must REPAIR it
+        rng = np.random.default_rng(0)
+        scrambled = rng.permutation(graph.n)
+        bad = noc.evaluate(graph, scrambled).comm_cost
+        from repro.core.placement.baselines import simulated_annealing
+        (repaired, us2) = timed(simulated_annealing, graph, noc, iters=6000,
+                                init=scrambled, seed=1)
+        rep_cost = noc.evaluate(graph, repaired).comm_cost
+        rows.append((
+            f"tpu_placement.{arch}.scrambled_hosts", us2,
+            f"scrambled={bad:.3e} repaired={rep_cost:.3e} "
+            f"red={100*(1-rep_cost/max(bad,1e-12)):.1f}% "
+            f"vs_ideal={rep_cost/max(base['comm_cost'],1e-12):.2f}x"))
+    return rows

@@ -1,0 +1,144 @@
+"""Sharded checkpointing with restart + elastic resharding.
+
+Layout:  <dir>/step_<N>/
+           manifest.json       — step, pytree paths, shapes/dtypes, data state
+           arrays.npz          — one entry per leaf (host-gathered)
+
+Features for large-scale runnability:
+* atomic commit (write to tmp dir, rename) — a preempted save never corrupts the
+  latest checkpoint;
+* async save (background thread) so the train loop never blocks on I/O;
+* elastic restore — arrays are re-``device_put`` with the *target* mesh's shardings,
+  so a run checkpointed on N devices restarts on M;
+* retention of the last ``keep`` checkpoints.
+
+(On a real multi-host pod each host writes its own shard files; here the single CPU
+process host-gathers. The manifest/commit protocol is the production-shaped part.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         keep: int = 3):
+    """Synchronous atomic save."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+_save_thread = None
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra=None, keep: int = 3):
+    """Non-blocking save: device->host copy happens on the caller thread (cheap
+    on CPU; on TPU it is the only sync part), serialization in background."""
+    global _save_thread
+    wait()
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+    def work():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "keys": sorted(flat), "extra": extra or {}},
+                      f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    _save_thread = threading.Thread(target=work, daemon=True)
+    _save_thread.start()
+
+
+def wait():
+    global _save_thread
+    if _save_thread is not None:
+        _save_thread.join()
+        _save_thread = None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: int | None = None,
+            shardings=None):
+    """Restore into ``template``'s treedef. ``shardings`` (same pytree) enables
+    elastic restore onto a new mesh."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat_s = (jax.tree_util.tree_leaves(shardings)
+              if shardings is not None else [None] * len(flat_t))
+    leaves = []
+    for (path, leaf), shard in zip(flat_t, flat_s):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = data[key]
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, manifest["step"], manifest["extra"]
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

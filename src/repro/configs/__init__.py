@@ -1,0 +1,2 @@
+from .registry import (ARCHS, SHAPES, LONG_OK, cells, get_config,  # noqa: F401
+                       get_smoke_config)

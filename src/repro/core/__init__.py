@@ -1,0 +1,6 @@
+"""The paper's contribution: balanced partitioning + RL core placement + pipelining."""
+from .graph import LogicalGraph, chain_graph, random_dag  # noqa: F401
+from .noc import NoC, NoCMetrics  # noqa: F401
+from .partition import (CoreSpec, LayerProfile, Partition,  # noqa: F401
+                        partition_model)
+from . import pipeline, tpu_adapter  # noqa: F401

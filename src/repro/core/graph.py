@@ -1,0 +1,117 @@
+"""Logical task graphs (paper §3.1, Definition A).
+
+A :class:`LogicalGraph` is the weighted DAG ``M(A, E)`` produced by partitioning a
+model: nodes are model slices ("logical cores"), edge weights are communication data
+volumes in bytes. Node attributes carry the compute/storage costs used by the
+partitioner and the five node features of the paper's RL state (§4.3):
+``[multicast, in_degree, out_degree, in_volume, out_volume]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+N_NODE_FEATURES = 5
+
+
+@dataclasses.dataclass
+class LogicalGraph:
+    """Weighted DAG of logical cores.
+
+    adj[i, j] = bytes sent from node i to node j per step (0 if no edge).
+    compute[i] = per-step compute cost of node i (seconds, or normalized units).
+    memory[i]  = bytes of state (weights + activations) resident on node i.
+    """
+
+    adj: np.ndarray
+    compute: np.ndarray
+    memory: np.ndarray
+    names: list | None = None
+
+    def __post_init__(self):
+        self.adj = np.asarray(self.adj, dtype=np.float64)
+        n = self.adj.shape[0]
+        if self.adj.shape != (n, n):
+            raise ValueError("adj must be square")
+        self.compute = np.asarray(self.compute, dtype=np.float64).reshape(n)
+        self.memory = np.asarray(self.memory, dtype=np.float64).reshape(n)
+        if self.names is None:
+            self.names = [f"n{i}" for i in range(n)]
+
+    @property
+    def n(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def edges(self):
+        """List of (src, dst, bytes) for nonzero edges."""
+        src, dst = np.nonzero(self.adj)
+        return [(int(i), int(j), float(self.adj[i, j])) for i, j in zip(src, dst)]
+
+    # ---- RL state encoding (paper Fig 5) -------------------------------------
+    def node_features(self) -> np.ndarray:
+        """[n, 5]: multicast flag, in/out degree, in/out data volume (normalized)."""
+        a = self.adj
+        out_deg = (a > 0).sum(axis=1).astype(np.float64)
+        in_deg = (a > 0).sum(axis=0).astype(np.float64)
+        out_vol = a.sum(axis=1)
+        in_vol = a.sum(axis=0)
+        multicast = (out_deg > 1).astype(np.float64)
+        feats = np.stack([multicast, in_deg, out_deg, in_vol, out_vol], axis=1)
+        # scale-free normalization so PPO is invariant to units
+        denom = feats.max(axis=0, keepdims=True)
+        denom[denom == 0] = 1.0
+        return feats / denom
+
+    def laplacian(self) -> np.ndarray:
+        """Symmetric-normalized Laplacian L̂ = D^-1/2 (A_sym + I) D^-1/2 (GCN form)."""
+        a = self.adj + self.adj.T
+        a = (a > 0).astype(np.float64) + np.eye(self.n)
+        d = a.sum(axis=1)
+        dinv = 1.0 / np.sqrt(np.maximum(d, 1e-12))
+        return (a * dinv[:, None]) * dinv[None, :]
+
+    def total_traffic(self) -> float:
+        return float(self.adj.sum())
+
+    def validate_dag(self) -> bool:
+        """True iff the graph is acyclic (Kahn)."""
+        indeg = (self.adj > 0).sum(axis=0).astype(int)
+        stack = [i for i in range(self.n) if indeg[i] == 0]
+        seen = 0
+        adj_list = [np.nonzero(self.adj[i])[0] for i in range(self.n)]
+        while stack:
+            u = stack.pop()
+            seen += 1
+            for v in adj_list[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(int(v))
+        return seen == self.n
+
+
+def chain_graph(volumes, compute=None, memory=None) -> LogicalGraph:
+    """Simple chain DAG: node i -> i+1 with volumes[i] bytes."""
+    n = len(volumes) + 1
+    adj = np.zeros((n, n))
+    for i, v in enumerate(volumes):
+        adj[i, i + 1] = v
+    compute = np.ones(n) if compute is None else compute
+    memory = np.ones(n) if memory is None else memory
+    return LogicalGraph(adj, compute, memory)
+
+
+def random_dag(n: int, p: float = 0.3, seed: int = 0,
+               vol_scale: float = 1024.0) -> LogicalGraph:
+    """Random DAG for property tests: edges only i->j with i<j."""
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < p, k=1).astype(np.float64)
+    adj *= rng.uniform(0.1, 1.0, (n, n)) * vol_scale
+    # keep the chain so the graph is connected
+    for i in range(n - 1):
+        if adj[i, i + 1] == 0:
+            adj[i, i + 1] = vol_scale * rng.uniform(0.1, 1.0)
+    compute = rng.uniform(0.5, 2.0, n)
+    memory = rng.uniform(0.5, 2.0, n) * 1e6
+    return LogicalGraph(adj, compute, memory)

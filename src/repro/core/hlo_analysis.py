@@ -1,0 +1,312 @@
+"""Structural cost analysis of post-SPMD HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 61 layers reports 1/61st of the real FLOPs. This walker parses the
+optimized HLO, multiplies ``while`` bodies by their ``known_trip_count`` backend
+config, recurses through fusions/calls, and accumulates:
+
+* ``flops``        — 2·|out|·|contracted| summed over every ``dot`` (MXU work; the
+  elementwise remainder is ignored — standard MFU practice, noted in EXPERIMENTS.md),
+* ``bytes``        — operand+output bytes at fusion boundaries (XLA's own memory-
+  traffic model), loop-scaled,
+* ``collectives``  — per-kind counts / operand bytes / ring wire bytes, loop-scaled,
+  the §Roofline collective term.
+
+Everything is derived from the compiled artifact itself, per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(sig: str):
+    """All dtype[dims] groups in a type signature -> [(dtype, [dims])]."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(sig: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_list(sig):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_sig: str
+    op: str
+    operands: list
+    raw: str
+
+
+def _parse_computations(hlo: str):
+    """Returns (comps: name -> [Instr], params: name -> [(pname, sig)])."""
+    comps: dict = {}
+    params: dict = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.+\{$", s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            params[cur] = re.findall(r"([\w.\-]+):\s*([^,]+?)(?:,|$)",
+                                     m.group(2))
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None or not s or s.startswith("//"):
+            continue
+        m = re.match(r"(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)",
+                     s)
+        if not m:
+            continue
+        name, out_sig, op, rest = m.groups()
+        # operand names: %foo refs up to closing paren of the call
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operands = re.findall(r"%([\w.\-]+)", rest[:i])
+        comps[cur].append(Instr(name, out_sig, op, operands, s))
+    return comps, params
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    n_dots: int = 0
+    unknown_trip: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.n_dots += int(other.n_dots * mult)
+        self.unknown_trip += other.unknown_trip
+        for k, v in other.coll.items():
+            d = self.coll.setdefault(k, {"count": 0.0, "operand_bytes": 0.0,
+                                         "wire_bytes": 0.0})
+            for f in d:
+                d[f] += v[f] * mult
+
+
+def _dot_flops(instr: Instr, symtab: dict) -> float:
+    out_elems = 1.0
+    for dt, dims in _shape_list(instr.out_sig):
+        for d in dims:
+            out_elems *= d
+        break
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    contract = 1.0
+    if m and instr.operands:
+        lhs_sig = symtab.get(instr.operands[0])
+        if lhs_sig:
+            shapes = _shape_list(lhs_sig)
+            if shapes:
+                dims = shapes[0][1]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _collective_entry(instr: Instr, symtab: dict):
+    kind = instr.op
+    if kind.endswith("-start"):
+        kind = kind[:-6]
+    out_b = _bytes_of(instr.out_sig)
+    # async -start ops carry tuple of (in, out) shapes; take the larger half
+    group = 1
+    gi = _GROUPS_IOTA_RE.search(instr.raw)
+    if gi:
+        group = int(gi.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(instr.raw)
+        if gl:
+            group = len([x for x in gl.group(1).split(",") if x.strip()])
+    if kind == "all-gather":
+        operand_b = sum(_bytes_of(symtab.get(o, "")) for o in instr.operands)
+        out_b = max(out_b, operand_b * group)
+        wire = (group - 1) / max(group, 1) * out_b
+        operand = out_b / max(group, 1)
+    elif kind == "reduce-scatter":
+        operand = sum(_bytes_of(symtab.get(o, "")) for o in instr.operands)
+        wire = (group - 1) / max(group, 1) * operand
+    elif kind == "all-reduce":
+        operand = sum(_bytes_of(symtab.get(o, "")) for o in instr.operands) \
+            or out_b
+        wire = 2.0 * (group - 1) / max(group, 1) * operand
+    elif kind == "all-to-all":
+        operand = out_b
+        wire = (group - 1) / max(group, 1) * operand
+    else:  # collective-permute
+        operand = out_b
+        wire = operand
+    return kind, {"count": 1.0, "operand_bytes": operand, "wire_bytes": wire}
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _param_read_bytes(callee: str, comps: dict, params: dict) -> float:
+    """HBM reads a fusion performs on its parameters — XLA-utilization-style:
+    a parameter consumed only through (dynamic-)slice/gather reads just the
+    slice; anything else reads the full parameter once."""
+    instrs = comps.get(callee, [])
+    psigs = dict(params.get(callee, []))
+    reads: dict = {}
+    for ins in instrs:
+        if ins.op == "parameter":
+            # `%param_0.2 = f32[...] parameter(0)` — map declared name
+            psigs.setdefault(ins.name, ins.out_sig)
+            continue
+        for o in ins.operands:
+            if o in psigs:
+                if ins.op in _SLICE_OPS:
+                    r = _bytes_of(ins.out_sig)
+                else:
+                    r = _bytes_of(psigs[o])
+                reads[o] = max(reads.get(o, 0.0), r)
+    return sum(reads.values())
+
+
+def analyze_computation(name: str, comps: dict, params: dict,
+                        memo: dict) -> Cost:
+    if name in memo:
+        return memo[name]
+    cost = Cost()
+    memo[name] = cost       # provisional (cycles shouldn't occur)
+    instrs = comps.get(name, [])
+    symtab = {i.name: i.out_sig for i in instrs}
+    for pn, sig in params.get(name, []):
+        symtab.setdefault(pn, sig)
+    for ins in instrs:
+        if ins.op == "dot":
+            cost.flops += _dot_flops(ins, symtab)
+            cost.n_dots += 1
+            cost.bytes += _bytes_of(ins.out_sig) + sum(
+                _bytes_of(symtab.get(o, "")) for o in ins.operands)
+        elif ins.op == "while":
+            m = _TRIP_RE.search(ins.raw)
+            trip = int(m.group(1)) if m else 1
+            if not m:
+                cost.unknown_trip += 1
+            cb = _COND_BODY_RE.search(ins.raw)
+            if cb:
+                cond, body = cb.groups()
+                cost.add(analyze_computation(body, comps, params, memo), trip)
+                cost.add(analyze_computation(cond, comps, params, memo), trip)
+        elif ins.op == "fusion":
+            for callee in _CALLS_RE.findall(ins.raw):
+                sub = analyze_computation(callee, comps, params, memo)
+                cost.flops += sub.flops           # dots inside fusions
+                cost.n_dots += sub.n_dots
+                cost.add(Cost(coll=sub.coll))
+                cost.bytes += _param_read_bytes(callee, comps, params)
+            cost.bytes += _bytes_of(ins.out_sig)
+        elif ins.op in ("call", "custom-call", "reduce", "sort", "scatter",
+                        "map", "reduce-window", "select-and-scatter",
+                        "conditional", "async-start"):
+            for callee in _CALLS_RE.findall(ins.raw):
+                cost.add(analyze_computation(callee, comps, params, memo))
+            m2 = re.search(r"(?:condition|body|to_apply|branch_computations)="
+                           r"\{?%([\w.\-]+)", ins.raw)
+            if m2:
+                cost.add(analyze_computation(m2.group(1), comps, params, memo))
+            if ins.op == "scatter":
+                # in-place semantics: update-sized traffic, not full operand
+                upd = (_bytes_of(symtab.get(ins.operands[-1], ""))
+                       if ins.operands else 0.0)
+                cost.bytes += 2.0 * upd
+            else:
+                cost.bytes += _bytes_of(ins.out_sig) + sum(
+                    _bytes_of(symtab.get(o, "")) for o in ins.operands)
+        elif any(ins.op.startswith(c) or ins.op == c for c in _COLLECTIVES):
+            if ins.op.endswith("-done"):
+                continue
+            kind, entry = _collective_entry(ins, symtab)
+            d = cost.coll.setdefault(kind, {"count": 0.0, "operand_bytes": 0.0,
+                                            "wire_bytes": 0.0})
+            for f in d:
+                d[f] += entry[f]
+            cost.bytes += _bytes_of(ins.out_sig)
+        elif ins.op in _SLICE_OPS:
+            cost.bytes += 2.0 * _bytes_of(ins.out_sig)
+        elif ins.op == "dynamic-update-slice":
+            upd = (_bytes_of(symtab.get(ins.operands[1], ""))
+                   if len(ins.operands) > 1 else 0.0)
+            cost.bytes += 2.0 * upd
+        elif ins.op in _SKIP_BYTES_OPS:
+            continue
+        else:
+            cost.bytes += _bytes_of(ins.out_sig) + sum(
+                _bytes_of(symtab.get(o, "")) for o in ins.operands)
+    memo[name] = cost
+    return cost
+
+
+def analyze_hlo(hlo: str) -> dict:
+    """Full-module structural cost. Returns flops / bytes / collectives with
+    while-loop trip multiplication."""
+    comps, params = _parse_computations(hlo)
+    memo: dict = {}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    cost = analyze_computation(entry, comps, params, memo)
+    total_operand = sum(v["operand_bytes"] for v in cost.coll.values())
+    total_wire = sum(v["wire_bytes"] for v in cost.coll.values())
+    n_ops = sum(v["count"] for v in cost.coll.values())
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "n_dots": cost.n_dots,
+        "unknown_trip_whiles": cost.unknown_trip,
+        "collectives": {"by_kind": cost.coll, "operand_bytes": total_operand,
+                        "wire_bytes": total_wire, "n_ops": n_ops},
+    }

@@ -1,0 +1,269 @@
+"""Balanced compute+storage model partitioning (paper §4.2, Fig 4).
+
+The paper partitions each layer along input channels C / output channels K, *unevenly
+across layers*, so that every logical core's per-step latency — compute time **plus**
+weight-streaming time for slices whose weights spill out of on-chip SRAM — is balanced.
+This avoids the "bucket effect" of compute-only balancing (late layers stall streaming
+weights) and of storage-only balancing (early layers stall on compute).
+
+Three strategies are implemented for the Fig 4 comparison:
+
+* ``compute``  — allocate cores ∝ FLOPs (Core-Placement-style uniform compute split),
+* ``storage``  — allocate cores ∝ weight bytes,
+* ``balanced`` — allocate cores ∝ modeled slice latency (compute + spill streaming),
+  then refine allocation greedily to minimize the maximum per-core latency.
+
+``Partition.to_graph()`` lowers a partition to the weighted logical DAG consumed by the
+placement optimizer: slice s of layer l multicasts its activation shard to every slice
+of layer l+1 (K-split consumers need the full input), which is exactly the multicast
+node feature the RL state encodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import LogicalGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """Per-layer cost profile (built by snn.profile / models cost model)."""
+    name: str
+    flops: float              # per-sample forward FLOPs
+    weight_bytes: float
+    out_bytes: float          # activation bytes produced per sample
+    c_in: int = 1
+    c_out: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSpec:
+    """Hardware model of one near-memory core (or one TPU chip for the adapter)."""
+    sram_bytes: float = 2 * 2 ** 20       # on-core SRAM for weights
+    flops_per_s: float = 25.6e9           # 16x16 MAC @ 100MHz, FP16
+    stream_bw: float = 8e9                # off-chip weight streaming bandwidth
+    def __post_init__(self):
+        assert self.sram_bytes > 0 and self.flops_per_s > 0 and self.stream_bw > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Slice:
+    layer: int
+    name: str
+    frac: float               # fraction of the layer's K channels
+    flops: float
+    weight_bytes: float
+    out_bytes: float
+
+    def latency(self, core: CoreSpec) -> float:
+        compute = self.flops / core.flops_per_s
+        spill = max(self.weight_bytes - core.sram_bytes, 0.0)
+        return compute + spill / core.stream_bw
+
+
+@dataclasses.dataclass
+class Partition:
+    slices: list
+    core: CoreSpec
+    strategy: str
+
+    @property
+    def n(self) -> int:
+        return len(self.slices)
+
+    def latencies(self) -> np.ndarray:
+        return np.array([s.latency(self.core) for s in self.slices])
+
+    def imbalance(self) -> float:
+        """Bucket-effect metric: max/mean per-core latency (1.0 = perfect)."""
+        lat = self.latencies()
+        return float(lat.max() / lat.mean()) if lat.size else 1.0
+
+    def to_graph(self) -> LogicalGraph:
+        n = len(self.slices)
+        adj = np.zeros((n, n))
+        by_layer: dict = {}
+        for idx, s in enumerate(self.slices):
+            by_layer.setdefault(s.layer, []).append(idx)
+        layers = sorted(by_layer)
+        for a, b in zip(layers[:-1], layers[1:]):
+            for i in by_layer[a]:
+                for j in by_layer[b]:
+                    # K-split consumer needs the producer's full activation shard
+                    adj[i, j] = self.slices[i].out_bytes
+        compute = np.array([s.flops for s in self.slices])
+        memory = np.array([s.weight_bytes for s in self.slices])
+        return LogicalGraph(adj, compute, memory,
+                            names=[s.name for s in self.slices])
+
+
+def _layer_weight(layer: LayerProfile, strategy: str, core: CoreSpec) -> float:
+    if strategy == "compute":
+        return layer.flops
+    if strategy == "storage":
+        return layer.weight_bytes
+    if strategy == "balanced":
+        return Slice(0, layer.name, 1.0, layer.flops, layer.weight_bytes,
+                     layer.out_bytes).latency(core)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _alloc_largest_remainder(weights: np.ndarray, n_cores: int) -> np.ndarray:
+    """Integer core counts per layer, >=1 each, summing to n_cores."""
+    n_layers = len(weights)
+    if n_cores < n_layers:
+        raise ValueError(f"need >= {n_layers} cores, got {n_cores}")
+    w = np.maximum(np.asarray(weights, dtype=np.float64), 1e-30)
+    ideal = w / w.sum() * n_cores
+    alloc = np.maximum(np.floor(ideal).astype(int), 1)
+    while alloc.sum() > n_cores:                       # floored over budget (rare)
+        over = alloc - ideal
+        over[alloc <= 1] = -np.inf
+        i = int(np.argmax(over))
+        if alloc[i] <= 1:  # nothing left to take
+            break
+        alloc[i] -= 1
+    rem = ideal - alloc
+    order = np.argsort(-rem)
+    k = 0
+    while alloc.sum() < n_cores:
+        alloc[order[k % n_layers]] += 1
+        k += 1
+    return alloc
+
+
+def _slice_layer(li: int, layer: LayerProfile, n_slices: int) -> list:
+    """Even K-split within a layer (within one layer the cost is symmetric in
+    channel fraction, so equal fractions minimize the within-layer maximum;
+    the *cross-layer* allocation carries the unevenness)."""
+    out: list = []
+    base = layer.c_out // n_slices
+    extra = layer.c_out % n_slices
+    for s in range(n_slices):
+        k = base + (1 if s < extra else 0)
+        frac = k / max(layer.c_out, 1)
+        out.append(Slice(
+            layer=li, name=f"{layer.name}.s{s}", frac=frac,
+            flops=layer.flops * frac,
+            weight_bytes=layer.weight_bytes * frac,
+            out_bytes=layer.out_bytes * frac,
+        ))
+    return out
+
+
+def _group_contiguous(weights: np.ndarray, k: int) -> list:
+    """Optimal contiguous k-way partition minimizing max group weight
+    (binary search on capacity + greedy feasibility)."""
+    w = np.asarray(weights, dtype=np.float64)
+    lo, hi = w.max(), w.sum()
+
+    def fits(cap):
+        groups, cur, cnt = [], 0.0, 1
+        bounds = []
+        for i, x in enumerate(w):
+            if cur + x > cap and cur > 0:
+                bounds.append(i)
+                cnt += 1
+                cur = x
+            else:
+                cur += x
+        return cnt <= k, bounds
+
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        ok, _ = fits(mid)
+        if ok:
+            hi = mid
+        else:
+            lo = mid
+    _, bounds = fits(hi)
+    starts = [0] + bounds + [len(w)]
+    groups = [(starts[i], starts[i + 1]) for i in range(len(starts) - 1)]
+    while len(groups) < k:                      # split the heaviest splittable group
+        sizes = [w[a:b].sum() if b - a > 1 else -1 for a, b in groups]
+        gi = int(np.argmax(sizes))
+        a, b = groups[gi]
+        cum = np.cumsum(w[a:b])
+        cut = a + 1 + int(np.argmin(np.abs(cum[:-1] - cum[-1] / 2)))
+        groups[gi:gi + 1] = [(a, cut), (cut, b)]
+    return groups
+
+
+def _merge_group(layers, a: int, b: int) -> LayerProfile:
+    sub = layers[a:b]
+    return LayerProfile(
+        name="+".join(l.name for l in sub),
+        flops=sum(l.flops for l in sub),
+        weight_bytes=sum(l.weight_bytes for l in sub),
+        out_bytes=sub[-1].out_bytes,
+        c_in=sub[0].c_in, c_out=sub[-1].c_out)
+
+
+def partition_model(layers, n_cores: int, strategy: str = "balanced",
+                    core: CoreSpec = CoreSpec()) -> Partition:
+    """Partition ``layers`` onto ``n_cores`` logical cores.
+
+    If there are more layers than cores, consecutive layers are first grouped
+    into ``n_cores`` contiguous groups balancing the strategy weight (the paper
+    maps 54-unit ResNet50 onto 32 logical cores this way), then each group
+    becomes one slice."""
+    layers = list(layers)
+    if len(layers) > n_cores:
+        weights = np.array([_layer_weight(l, strategy, core) for l in layers])
+        groups = _group_contiguous(weights, n_cores)
+        layers = [_merge_group(layers, a, b) for a, b in groups]
+    weights = np.array([_layer_weight(l, strategy, core) for l in layers])
+    alloc = _alloc_largest_remainder(weights, n_cores)
+
+    if strategy == "balanced":
+        alloc = _refine_alloc(layers, alloc, core)
+
+    slices: list = []
+    for li, (layer, k) in enumerate(zip(layers, alloc)):
+        slices.extend(_slice_layer(li, layer, int(k)))
+    return Partition(slices=slices, core=core, strategy=strategy)
+
+
+def _max_latency(layers, alloc, core) -> float:
+    worst = 0.0
+    for li, (layer, k) in enumerate(zip(layers, alloc)):
+        lat = max(s.latency(core) for s in _slice_layer(li, layer, int(k)))
+        worst = max(worst, lat)
+    return worst
+
+
+def _refine_alloc(layers, alloc, core, iters: int = 256) -> np.ndarray:
+    """Greedy rebalancing: repeatedly move one core from the least-loaded layer
+    to the layer holding the current max-latency slice (paper's balancing of
+    total compute+transmission time per slice). Nonlinear spill thresholds make
+    this beat the proportional allocation."""
+    alloc = alloc.copy()
+    n_layers = len(layers)
+
+    def per_layer_lat(a):
+        return np.array([
+            max(s.latency(core) for s in _slice_layer(li, layers[li], int(a[li])))
+            for li in range(n_layers)])
+
+    for _ in range(iters):
+        lat = per_layer_lat(alloc)
+        worst = int(np.argmax(lat))
+        # donor: layer whose latency would rise least after losing one core
+        best_gain, donor = 0.0, -1
+        for li in range(n_layers):
+            if li == worst or alloc[li] <= 1:
+                continue
+            trial = alloc.copy()
+            trial[li] -= 1
+            trial[worst] += 1
+            new_max = per_layer_lat(trial).max()
+            gain = lat.max() - new_max
+            if gain > best_gain + 1e-15:
+                best_gain, donor = gain, li
+        if donor < 0:
+            break
+        alloc[donor] -= 1
+        alloc[worst] += 1
+    return alloc

@@ -1,0 +1,2 @@
+from .optimizer import optimize_placement, PlacementResult  # noqa: F401
+from .baselines import zigzag, sigmate, random_search, simulated_annealing  # noqa: F401

@@ -1,0 +1,98 @@
+"""Baseline placement methods (paper §5.1): Zigzag, Sigmate, Random Search — plus
+simulated annealing and a communication-greedy constructor (beyond-paper references)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def zigzag(n_nodes: int, noc) -> np.ndarray:
+    """Row-major sequential deployment from the top-left corner."""
+    if n_nodes > noc.n_cores:
+        raise ValueError("graph larger than NoC")
+    return np.arange(n_nodes)
+
+
+def sigmate(n_nodes: int, noc) -> np.ndarray:
+    """Serpentine deployment: each row filled in alternating direction, so
+    consecutive logical nodes stay physically adjacent across row boundaries."""
+    if n_nodes > noc.n_cores:
+        raise ValueError("graph larger than NoC")
+    order = []
+    for r in range(noc.rows):
+        cols = range(noc.cols) if r % 2 == 0 else range(noc.cols - 1, -1, -1)
+        order.extend(noc.index(r, c) for c in cols)
+    return np.asarray(order[:n_nodes])
+
+
+def random_search(graph, noc, iters: int = 2000, seed: int = 0) -> np.ndarray:
+    """Paper's RS baseline: sample random injective placements, keep the best."""
+    rng = np.random.default_rng(seed)
+    best, best_cost = None, np.inf
+    for _ in range(iters):
+        p = rng.permutation(noc.n_cores)[:graph.n]
+        c = noc.evaluate(graph, p).comm_cost
+        if c < best_cost:
+            best, best_cost = p, c
+    return best
+
+
+def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
+                        t_end_frac: float = 1e-3, seed: int = 0,
+                        init=None) -> np.ndarray:
+    """Pairwise-swap SA over placements (beyond-paper local-search reference,
+    cf. cyclic RL+SA placement [Vashisht et al. 2020]).
+
+    Temperature starts at ``t0 × initial_cost`` and decays geometrically to
+    ``t_end_frac`` of that over ``iters`` steps.
+    """
+    rng = np.random.default_rng(seed)
+    cur = np.array(init if init is not None else zigzag(graph.n, noc))
+    # extend with free cores so swaps can move nodes to empty cells
+    free = [i for i in range(noc.n_cores) if i not in set(cur.tolist())]
+    slots = np.concatenate([cur, np.asarray(free, dtype=int)])
+    n = graph.n
+    cost = noc.evaluate(graph, slots[:n]).comm_cost
+    best, best_cost = slots[:n].copy(), cost
+    t = max(t0 * max(cost, 1.0), 1e-9)
+    cooling = t_end_frac ** (1.0 / max(iters, 1))
+    for _ in range(iters):
+        i, j = rng.integers(0, len(slots), 2)
+        if i == j or (i >= n and j >= n):
+            continue
+        slots[i], slots[j] = slots[j], slots[i]
+        new_cost = noc.evaluate(graph, slots[:n]).comm_cost
+        if new_cost <= cost or rng.random() < np.exp((cost - new_cost) / max(t, 1e-9)):
+            cost = new_cost
+            if cost < best_cost:
+                best, best_cost = slots[:n].copy(), cost
+        else:
+            slots[i], slots[j] = slots[j], slots[i]
+        t *= cooling
+    return best
+
+
+def greedy(graph, noc) -> np.ndarray:
+    """Constructive greedy: place nodes in topological-ish (index) order, each at
+    the free core minimizing the incremental hop-weighted cost to already-placed
+    neighbours."""
+    placement = np.full(graph.n, -1, dtype=int)
+    taken = set()
+    adj = graph.adj
+    for node in range(graph.n):
+        best_core, best_inc = None, np.inf
+        for core in range(noc.n_cores):
+            if core in taken:
+                continue
+            inc = 0.0
+            for other in range(graph.n):
+                if placement[other] < 0:
+                    continue
+                if adj[node, other] > 0:
+                    inc += adj[node, other] * noc.hops(core, placement[other])
+                if adj[other, node] > 0:
+                    inc += adj[other, node] * noc.hops(placement[other], core)
+            if inc < best_inc:
+                best_inc, best_core = inc, core
+        placement[node] = best_core
+        taken.add(best_core)
+    return placement

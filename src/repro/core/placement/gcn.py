@@ -1,0 +1,37 @@
+"""Graph-convolution encoder (paper §4.3, Fig 5b/5c front-end).
+
+Two GCN layers over the normalized Laplacian:  H' = relu(L̂ H W).  The paper freezes
+the GCN after pre-training; we expose ``freeze_gcn`` in the PPO config (we cannot ship
+their pre-training corpus, so by default the encoder trains jointly — both modes are
+benchmarked in tests).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models import specs
+from ...models.specs import param
+
+
+def gcn_specs(d_in: int, d_hidden: int, n_layers: int = 2):
+    out = {}
+    d = d_in
+    for i in range(n_layers):
+        out[f"w{i}"] = param((d, d_hidden), ("gcn_in", "gcn_out"))
+        out[f"b{i}"] = param((d_hidden,), ("gcn_out",), init="zeros")
+        d = d_hidden
+    return out
+
+
+def gcn_apply(params, lap, x):
+    """lap [n,n], x [n,d_in] -> [n,d_hidden]."""
+    h = x
+    i = 0
+    while f"w{i}" in params:
+        h = lap @ h @ params[f"w{i}"] + params[f"b{i}"]
+        h = jnp.maximum(h, 0.0)
+        i += 1
+    return h
+
+
+__all__ = ["gcn_specs", "gcn_apply", "specs"]

@@ -1,0 +1,81 @@
+"""End-to-end placement optimization driver.
+
+``optimize_placement(graph, noc, method=...)`` dispatches to all implemented methods
+and returns a uniform :class:`PlacementResult`, so benchmarks and the TPU adapter can
+sweep methods with one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from . import baselines
+from .policy_baseline import PolicyConfig, run_policy_baseline
+from .ppo import PPOConfig, run_ppo
+
+
+@dataclasses.dataclass
+class PlacementResult:
+    method: str
+    placement: np.ndarray
+    comm_cost: float
+    mean_hops: float
+    latency: float
+    throughput: float
+    max_link: float
+    wall_time_s: float
+    history: list | None = None
+
+    def summary(self) -> dict:
+        return {
+            "method": self.method,
+            "comm_cost": self.comm_cost,
+            "mean_hops": self.mean_hops,
+            "latency": self.latency,
+            "throughput": self.throughput,
+            "max_link": self.max_link,
+            "wall_time_s": self.wall_time_s,
+        }
+
+
+METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
+           "greedy", "policy", "ppo")
+
+
+def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
+                       budget: int | None = None, **kw) -> PlacementResult:
+    t0 = time.time()
+    history = None
+    if method == "zigzag":
+        placement = baselines.zigzag(graph.n, noc)
+    elif method == "sigmate":
+        placement = baselines.sigmate(graph.n, noc)
+    elif method == "random_search":
+        placement = baselines.random_search(graph, noc, iters=budget or 2000,
+                                            seed=seed)
+    elif method == "simulated_annealing":
+        placement = baselines.simulated_annealing(graph, noc,
+                                                  iters=budget or 5000, seed=seed)
+    elif method == "greedy":
+        placement = baselines.greedy(graph, noc)
+    elif method == "policy":
+        cfg = kw.pop("cfg", None) or PolicyConfig(
+            iterations=budget or 40, seed=seed, **kw)
+        out = run_policy_baseline(graph, noc, cfg)
+        placement, history = out["best_placement"], out["history"]
+    elif method == "ppo":
+        cfg = kw.pop("cfg", None) or PPOConfig(iterations=budget or 40, seed=seed,
+                                               **kw)
+        st = run_ppo(graph, noc, cfg)
+        placement, history = st.best_placement, st.history
+    else:
+        raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+    m = noc.evaluate(graph, placement)
+    return PlacementResult(
+        method=method, placement=np.asarray(placement),
+        comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,
+        throughput=m.throughput, max_link=m.max_link,
+        wall_time_s=time.time() - t0, history=history)

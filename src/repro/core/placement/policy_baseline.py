@@ -1,0 +1,125 @@
+"""'Policy' baseline (Myung et al., TNNLS 2021) — the prior RL placement method the
+paper compares against in Fig 10/11.
+
+Myung's method is a policy-gradient (REINFORCE-family) placer whose network emits a
+categorical distribution over physical cores per logical node, sampled without
+replacement, trained with a moving-average baseline. We reproduce that shape:
+per-node logits [n, n_cores] -> masked sequential sampling -> REINFORCE with
+exponential-moving-average baseline. No critic, no clipping — the contrast with the
+paper's PPO+GCN continuous-action method is exactly what Fig 10 measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...models.specs import param, materialize
+from ...train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    batch_size: int = 64
+    lr: float = 5e-3
+    iterations: int = 60
+    d_hidden: int = 64
+    baseline_decay: float = 0.9
+    seed: int = 0
+
+
+def policy_specs(d_feat: int, n_cores: int, d_hidden: int):
+    return {
+        "w1": param((d_feat, d_hidden), ("p_in", "p_out")),
+        "b1": param((d_hidden,), ("p_out",), init="zeros"),
+        "w2": param((d_hidden, n_cores), ("p_in", "p_out"), scale=0.01),
+        "b2": param((n_cores,), ("p_out",), init="zeros"),
+    }
+
+
+def policy_logits(params, feats):
+    h = jnp.maximum(feats @ params["w1"] + params["b1"], 0.0)
+    return h @ params["w2"] + params["b2"]        # [n, n_cores]
+
+
+def sample_placements(key, logits, n_samples: int):
+    """Sequential masked categorical sampling without replacement.
+
+    Returns placements [B, n] int and log-probs [B].
+    """
+    n, n_cores = logits.shape
+
+    def one(key):
+        def body(carry, i):
+            key, mask = carry
+            key, k = jax.random.split(key)
+            l = jnp.where(mask, -1e30, logits[i])
+            choice = jax.random.categorical(k, l)
+            logp = jax.nn.log_softmax(l)[choice]
+            mask = mask.at[choice].set(True)
+            return (key, mask), (choice, logp)
+        (_, _), (choices, logps) = jax.lax.scan(
+            body, (key, jnp.zeros(n_cores, bool)), jnp.arange(n))
+        return choices, logps.sum()
+
+    keys = jax.random.split(key, n_samples)
+    return jax.vmap(one)(keys)
+
+
+def placement_logp(params, feats, placements):
+    """Log-prob of given placements under the masked sequential policy: [B]."""
+    logits = policy_logits(params, feats)
+    n, n_cores = logits.shape
+
+    def one(p):
+        def body(mask, i):
+            l = jnp.where(mask, -1e30, logits[i])
+            logp = jax.nn.log_softmax(l)[p[i]]
+            return mask.at[p[i]].set(True), logp
+        _, logps = jax.lax.scan(body, jnp.zeros(n_cores, bool), jnp.arange(n))
+        return logps.sum()
+
+    return jax.vmap(one)(placements)
+
+
+@partial(jax.jit, static_argnames=("adam",))
+def _reinforce_update(params, opt, feats, placements, advantages,
+                      adam: AdamWConfig = AdamWConfig(lr=5e-3)):
+    def loss(p):
+        logp = placement_logp(p, feats, placements)
+        return -jnp.mean(logp * advantages)
+    l, g = jax.value_and_grad(loss)(params)
+    params, opt = adamw_update(g, opt, params, adam)
+    return params, opt, l
+
+
+def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
+    key = jax.random.PRNGKey(cfg.seed)
+    feats = jnp.asarray(graph.node_features(), jnp.float32)
+    params = materialize(key, policy_specs(feats.shape[1], noc.n_cores, cfg.d_hidden))
+    opt = adamw_init(params, AdamWConfig(lr=cfg.lr))
+    baseline = None
+    best_cost, best_placement = np.inf, None
+    history = []
+    for it in range(cfg.iterations):
+        key, k = jax.random.split(key)
+        logits = policy_logits(params, feats)
+        placements, _ = sample_placements(k, logits, cfg.batch_size)
+        placements_np = np.asarray(placements)
+        costs = np.array([noc.evaluate(graph, p).comm_cost for p in placements_np])
+        i = int(costs.argmin())
+        if costs[i] < best_cost:
+            best_cost, best_placement = float(costs[i]), placements_np[i].copy()
+        rewards = -costs
+        baseline = rewards.mean() if baseline is None else \
+            cfg.baseline_decay * baseline + (1 - cfg.baseline_decay) * rewards.mean()
+        adv = jnp.asarray((rewards - baseline) / (rewards.std() + 1e-8), jnp.float32)
+        params, opt, l = _reinforce_update(params, opt, feats, placements, adv,
+                                           AdamWConfig(lr=cfg.lr))
+        history.append({"iter": it, "mean_cost": float(costs.mean()),
+                        "best_cost": best_cost, "loss": float(l)})
+    return {"best_cost": best_cost, "best_placement": best_placement,
+            "history": history}

@@ -1,0 +1,138 @@
+"""PPO-clip training of the placement policy (paper §4.3 "Weight Update", Eq. 5).
+
+One-shot placement is a contextual bandit: every episode is a single action (a full
+placement) followed by the simulator reward (Eq. 4). We therefore use PPO with a
+state-value baseline from the critic, advantage normalization, reward scaling against
+the Zigzag baseline, and reward clipping to [-10, 10] (paper's setting).
+
+Paper hyperparameters (§5.1): gcn feature size 32, batch 256, lr 0.005,
+ppo_epochs 10, clip 0.1–0.5, reward clip [-10, 10]. Defaults below mirror them but are
+all overridable; tests use smaller batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...train.optim import AdamWConfig, adamw_init, adamw_update
+from . import actor_critic as ac
+from .discretize import actions_to_placement
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    batch_size: int = 256
+    lr: float = 5e-3
+    ppo_epochs: int = 10
+    clip: float = 0.2           # paper reports 0.1 (range) and 0.5 (ppo_clip)
+    entropy_coef: float = 1e-3
+    reward_clip: float = 10.0
+    iterations: int = 60
+    d_gcn: int = 32             # paper: GCN feature size 32
+    d_fc: int = 64
+    freeze_gcn: bool = True     # paper: GCN pre-trained, not updated by PPO
+    action_clip: float = 1.0
+    seed: int = 0
+
+
+def _freeze_gcn_grads(grads):
+    g = dict(grads)
+    g["gcn"] = jax.tree_util.tree_map(jnp.zeros_like, grads["gcn"])
+    return g
+
+
+@partial(jax.jit, static_argnames=("cfg_clip", "cfg_ent", "freeze_gcn",
+                                   "adam_a", "adam_c"))
+def _ppo_update(actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
+                cfg_clip: float, cfg_ent: float, freeze_gcn: bool,
+                adam_a: AdamWConfig = AdamWConfig(lr=5e-3),
+                adam_c: AdamWConfig = AdamWConfig(lr=5e-3)):
+    value = ac.critic_apply(critic, lap, feats)
+    adv = rewards - value
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+    def actor_loss(a_params):
+        mu, log_std = ac.actor_apply(a_params, lap, feats)
+        logp = ac.gaussian_logp(acts, mu, log_std)
+        ratio = jnp.exp(logp - logp_old)
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - cfg_clip, 1 + cfg_clip) * adv
+        pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+        ent = ac.entropy(log_std)
+        return pg - cfg_ent * ent
+
+    def critic_loss(c_params):
+        v = ac.critic_apply(c_params, lap, feats)
+        return jnp.mean((rewards - v) ** 2)
+
+    la, ga = jax.value_and_grad(actor_loss)(actor)
+    if freeze_gcn:
+        ga = _freeze_gcn_grads(ga)
+    lc, gc = jax.value_and_grad(critic_loss)(critic)
+    actor, opt_a = adamw_update(ga, opt_a, actor, adam_a)
+    critic, opt_c = adamw_update(gc, opt_c, critic, adam_c)
+    return actor, critic, opt_a, opt_c, la, lc
+
+
+@dataclasses.dataclass
+class PPOState:
+    actor: dict
+    critic: dict
+    opt_a: dict
+    opt_c: dict
+    history: list
+    best_cost: float
+    best_placement: np.ndarray
+
+
+def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
+            priority=None) -> PPOState:
+    """Optimize a placement of ``graph`` on ``noc`` with PPO. Returns best found."""
+    key = jax.random.PRNGKey(cfg.seed)
+    lap = jnp.asarray(graph.laplacian(), jnp.float32)
+    feats = jnp.asarray(graph.node_features(), jnp.float32)
+    actor, critic = ac.init_actor_critic(key, feats.shape[1], cfg.d_gcn, cfg.d_fc)
+    adam = AdamWConfig(lr=cfg.lr)
+    opt_a, opt_c = adamw_init(actor, adam), adamw_init(critic, adam)
+
+    if baseline_cost is None:
+        from .baselines import zigzag
+        baseline_cost = noc.evaluate(graph, zigzag(graph.n, noc)).comm_cost
+    baseline_cost = max(baseline_cost, 1e-12)
+
+    best_cost, best_placement = np.inf, None
+    history = []
+    for it in range(cfg.iterations):
+        key, k_s = jax.random.split(key)
+        mu, log_std = ac.actor_apply(actor, lap, feats)
+        acts, logp_old = ac.sample_actions(k_s, mu, log_std, cfg.batch_size)
+        acts_np = np.asarray(acts, np.float64)
+        costs = np.empty(cfg.batch_size)
+        for b in range(cfg.batch_size):
+            placement = actions_to_placement(acts_np[b], noc.rows, noc.cols,
+                                             cfg.action_clip, priority)
+            costs[b] = noc.evaluate(graph, placement).comm_cost
+            if costs[b] < best_cost:
+                best_cost, best_placement = costs[b], placement
+        rewards = np.clip(cfg.reward_clip * (baseline_cost - costs) / baseline_cost,
+                          -cfg.reward_clip, cfg.reward_clip)
+        rewards = jnp.asarray(rewards, jnp.float32)
+        for _ in range(cfg.ppo_epochs):
+            actor, critic, opt_a, opt_c, la, lc = _ppo_update(
+                actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
+                cfg.clip, cfg.entropy_coef, cfg.freeze_gcn,
+                AdamWConfig(lr=cfg.lr), AdamWConfig(lr=cfg.lr))
+        history.append({
+            "iter": it,
+            "mean_cost": float(costs.mean()),
+            "min_cost": float(costs.min()),
+            "best_cost": float(best_cost),
+            "actor_loss": float(la),
+            "critic_loss": float(lc),
+        })
+    return PPOState(actor, critic, opt_a, opt_c, history, float(best_cost),
+                    best_placement)

@@ -1,0 +1,248 @@
+"""TPU adaptation of the paper's placement problem (DESIGN.md §2).
+
+A v5e pod is a 16×16 torus of chips with nearest-neighbour ICI — structurally the
+paper's 2D-mesh NoC. XLA owns per-op routing, so placement acts one level up: the
+permutation from *logical mesh coordinates* (what `jax.sharding.Mesh` axes index) to
+*physical chips* decides how many ICI hops each collective's ring/group neighbours
+are apart. We:
+
+1. parse the compiled HLO for collectives (`hlo_collectives`) to get per-device
+   operand bytes and group sizes — both the roofline collective term and the traffic
+   matrix source;
+2. build a device-level :class:`LogicalGraph` whose edges are per-step bytes between
+   logical devices (`collective_traffic_graph`) — ring neighbours for
+   all-reduce/all-gather/reduce-scatter, all-pairs within a group for all-to-all,
+   explicit source-target pairs for collective-permute;
+3. score/optimize the logical→physical assignment on a torus `NoC` with the paper's
+   machinery (`optimize_device_order`), and emit the reordered device list for
+   `Mesh` construction.
+
+Identity assignment == row-major `jax.make_mesh` default, which is the baseline the
+optimized orders are compared against in `benchmarks/tpu_placement.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from .graph import LogicalGraph
+from .noc import NoC
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n * b)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str                 # one of _COLLECTIVES (async -start suffix stripped)
+    out_bytes: float          # per-device output bytes (sum over tuple elements)
+    group_size: int           # devices participating per replica group
+    source_target_pairs: list | None = None
+
+    @property
+    def operand_bytes(self) -> float:
+        """Per-device operand ("input shard") bytes — roofline's collective_bytes."""
+        if self.kind == "all-gather":
+            return self.out_bytes / max(self.group_size, 1)
+        if self.kind == "reduce-scatter":
+            return self.out_bytes * max(self.group_size, 1)
+        return self.out_bytes
+
+    @property
+    def wire_bytes(self) -> float:
+        """Bytes each device actually moves over links (ring algorithms)."""
+        s = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            return 2.0 * (s - 1) / s * self.out_bytes
+        if self.kind == "all-gather":
+            return (s - 1) / s * self.out_bytes
+        if self.kind == "reduce-scatter":
+            return (s - 1) / s * self.operand_bytes
+        if self.kind == "all-to-all":
+            return (s - 1) / s * self.out_bytes
+        return self.out_bytes   # collective-permute
+
+
+def hlo_collectives(hlo_text: str) -> list:
+    """Parse collective instructions out of (optimized) HLO module text."""
+    ops: list = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+([a-z\-]+)(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        if kind not in _COLLECTIVES:
+            continue
+        if "-done(" in stripped:     # avoid double counting async pairs
+            continue
+        out_bytes = sum(_shape_bytes(d, s) for d, s in
+                        _SHAPE_RE.findall(m.group(1)))
+        group_size = 1
+        gi = _GROUPS_IOTA_RE.search(stripped)
+        if gi:
+            group_size = int(gi.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(stripped)
+            if gl:
+                group_size = len([x for x in gl.group(1).split(",") if x.strip()])
+        stp = None
+        sm = _SOURCE_TARGET_RE.search(stripped)
+        if sm:
+            pairs = re.findall(r"\{(\d+),(\d+)\}", sm.group(1) + "}")
+            stp = [(int(a), int(b)) for a, b in pairs]
+        ops.append(CollectiveOp(kind, out_bytes, group_size, stp))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Aggregate per-device collective bytes by kind + totals."""
+    ops = hlo_collectives(hlo_text)
+    by_kind: dict = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "operand_bytes": 0.0,
+                                         "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op.operand_bytes
+        d["wire_bytes"] += op.wire_bytes
+    total_operand = sum(d["operand_bytes"] for d in by_kind.values())
+    total_wire = sum(d["wire_bytes"] for d in by_kind.values())
+    return {"by_kind": by_kind, "operand_bytes": total_operand,
+            "wire_bytes": total_wire, "n_ops": len(ops)}
+
+
+# ---------------------------------------------------------------------------
+# Device-level traffic graph
+# ---------------------------------------------------------------------------
+
+def _axis_groups(mesh_shape, axis: int):
+    """Groups of flat logical device ids that share all coords except ``axis``."""
+    n = int(np.prod(mesh_shape))
+    ids = np.arange(n).reshape(mesh_shape)
+    moved = np.moveaxis(ids, axis, -1)
+    return moved.reshape(-1, mesh_shape[axis])
+
+
+def collective_traffic_graph(mesh_shape, axis_traffic: dict,
+                             a2a_traffic: dict | None = None,
+                             compute=None) -> LogicalGraph:
+    """Build the device-level logical graph from per-axis collective traffic.
+
+    axis_traffic: {axis_index: per-device ring bytes} — ring collectives
+      (all-reduce / all-gather / reduce-scatter) put their wire bytes on the two
+      ring-neighbour edges of each group member.
+    a2a_traffic:  {axis_index: per-device a2a bytes} — all-to-all spreads
+      bytes/(S-1) onto every pair in the group (MoE dispatch).
+    """
+    n = int(np.prod(mesh_shape))
+    adj = np.zeros((n, n))
+    for axis, bytes_per_dev in (axis_traffic or {}).items():
+        for group in _axis_groups(mesh_shape, axis):
+            s = len(group)
+            if s < 2:
+                continue
+            per_edge = bytes_per_dev / 2.0     # ring splits onto 2 directions
+            for i in range(s):
+                a, b = group[i], group[(i + 1) % s]
+                adj[a, b] += per_edge
+                adj[b, a] += per_edge
+    for axis, bytes_per_dev in (a2a_traffic or {}).items():
+        for group in _axis_groups(mesh_shape, axis):
+            s = len(group)
+            if s < 2:
+                continue
+            per_pair = bytes_per_dev / (s - 1)
+            for i in range(s):
+                for j in range(s):
+                    if i != j:
+                        adj[group[i], group[j]] += per_pair
+    if compute is None:
+        compute = np.ones(n)
+    return LogicalGraph(adj, compute, np.zeros(n))
+
+
+def traffic_from_hlo(hlo_text: str, mesh_shape, axis_names) -> LogicalGraph:
+    """Heuristic: attribute each parsed collective to the mesh axis whose size
+    matches its replica-group size (ambiguous sizes go to the *last* matching
+    axis — the innermost, which is the common GSPMD layout)."""
+    ops = hlo_collectives(hlo_text)
+    axis_traffic: dict = {}
+    a2a_traffic: dict = {}
+    sizes = list(mesh_shape)
+    for op in ops:
+        matches = [i for i, s in enumerate(sizes) if s == op.group_size]
+        if not matches:
+            continue     # cross-axis group; handled conservatively by skip
+        axis = matches[-1]
+        if op.kind == "all-to-all":
+            a2a_traffic[axis] = a2a_traffic.get(axis, 0.0) + op.wire_bytes
+        else:
+            axis_traffic[axis] = axis_traffic.get(axis, 0.0) + op.wire_bytes
+    return collective_traffic_graph(mesh_shape, axis_traffic, a2a_traffic)
+
+
+# ---------------------------------------------------------------------------
+# Placement of logical devices on the physical torus
+# ---------------------------------------------------------------------------
+
+def pod_noc(rows: int = 16, cols: int = 16, link_bw: float = 50e9) -> NoC:
+    """v5e pod: 2D torus, ~50 GB/s per ICI link."""
+    return NoC(rows, cols, torus=True, link_bw=link_bw, core_flops=197e12)
+
+
+def default_assignment(n_devices: int) -> np.ndarray:
+    return np.arange(n_devices)
+
+
+def ici_cost(graph: LogicalGraph, noc: NoC, assignment=None) -> dict:
+    assignment = default_assignment(graph.n) if assignment is None else assignment
+    m = noc.evaluate(graph, assignment)
+    return {"comm_cost": m.comm_cost, "mean_hops": m.mean_hops,
+            "max_link": m.max_link, "latency": m.latency}
+
+
+def optimize_device_order(graph: LogicalGraph, noc: NoC, method: str = "ppo",
+                          budget: int | None = None, seed: int = 0):
+    """Paper's optimizer applied to the device graph. Returns (assignment,
+    PlacementResult); ``assignment[logical] = physical core index``."""
+    from .placement import optimize_placement
+    res = optimize_placement(graph, noc, method=method, budget=budget, seed=seed)
+    return res.placement, res
+
+
+def apply_assignment(devices, assignment, mesh_shape):
+    """Reorder ``devices`` so logical mesh position i lands on physical chip
+    assignment[i]; reshape for `jax.sharding.Mesh`."""
+    devices = list(devices)
+    n = int(np.prod(mesh_shape))
+    if len(devices) != n:
+        raise ValueError(f"need {n} devices, got {len(devices)}")
+    ordered = [devices[int(p)] for p in np.asarray(assignment)]
+    return np.asarray(ordered, dtype=object).reshape(mesh_shape)

@@ -1,0 +1,113 @@
+"""FlashAttention forward kernel (Pallas, TPU target).
+
+Tiled online-softmax attention: grid (B, H, Sq/bq, Skv/bk), fp32 running
+(max, sum, acc) scratch in VMEM, GQA handled in the k/v index maps (kv head =
+h // (H // Hkv) — no materialized head repeat), causal and sliding-window masking
+with *block-level early-out*: fully-masked kv blocks skip both the QK^T and PV MXU
+passes (the same tile-skip idea as the spike kernel, here driven by structure
+rather than data).
+
+Used on the serving path (prefill); training uses the differentiable chunked-scan
+reference (``repro.models.layers.chunked_attention``) which XLA fuses well — the
+bwd Pallas kernel is future work, recorded in DESIGN.md.
+
+Block shapes: (bq, d) × (bk, d) with d padded to 128 multiples by ops.py; MXU dims
+aligned. Scalars are kept as (bq, 1) VMEM columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  bq: int, bk: int, n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level visibility: any (q, k) pair in this tile unmasked?
+    visible = True
+    if causal:
+        visible = k_start <= q_start + bq - 1
+    if window is not None:
+        visible = jnp.logical_and(
+            visible, k_start + bk - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                           # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q [B,H,S,D], k/v [B,Hkv,S,D] -> [B,H,S,D]. S % block == 0, D MXU-friendly."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    bq, bk = min(block_q, s), min(block_k, s)
+    if s % bq or s % bk:
+        raise ValueError(f"seq {s} not divisible by blocks ({bq},{bk})")
+    n_k = s // bk
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, s // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // rep, k_, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, q_, k_: (b_, h_ // rep, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding/reshaping to kernel-friendly layouts, pick interpret mode
+automatically on CPU (the container validates kernels in interpret mode; on TPU the
+same code path compiles to Mosaic), and expose convolution-shaped entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .lif import lif_step_pallas
+from .spike_matmul import spike_matmul_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ---- LIF -------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("threshold", "decay", "reset",
+                                             "interpret"))
+def lif_step(u, s_prev, current, *, threshold: float = 1.0, decay: float = 0.5,
+             reset: str = "hard", interpret: bool | None = None):
+    """Fused LIF update for arbitrary-shaped state tensors."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = u.shape
+    flat = u.size
+    lanes = 128
+    rows = max(flat // lanes, 1)
+    # flatten to [rows, 128] (+ padding)
+    def prep(x):
+        x = x.reshape(-1)
+        x, _ = _pad_to(x, lanes * max(rows, 1), 0) if flat % lanes else (x, 0)
+        pad = (-x.size) % lanes
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(-1, lanes)
+    u2, s2, c2 = prep(u), prep(s_prev), prep(current)
+    bm = u2.shape[0]
+    # pick a row block that divides
+    block_rows = 256
+    while u2.shape[0] % block_rows:
+        block_rows //= 2
+        if block_rows == 0:
+            block_rows = u2.shape[0]
+            break
+    u_new, s_new = lif_step_pallas(u2, s2, c2, threshold=threshold, decay=decay,
+                                   reset=reset, block=(block_rows, lanes),
+                                   interpret=interpret)
+    return (u_new.reshape(-1)[:flat].reshape(shape),
+            s_new.reshape(-1)[:flat].reshape(shape))
+
+
+# ---- spike matmul ------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m", "block_k",
+                                             "block_n"))
+def spike_matmul(spikes, w, *, interpret: bool | None = None, block_m: int = 128,
+                 block_k: int = 128, block_n: int = 128):
+    """spikes [M,K] {0,1} @ w [K,N]; pads all dims to block multiples."""
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = spikes.shape
+    n = w.shape[1]
+    s2, _ = _pad_to(spikes, block_m, 0)
+    s2, _ = _pad_to(s2, block_k, 1)
+    w2, _ = _pad_to(w, block_k, 0)
+    w2, _ = _pad_to(w2, block_n, 1)
+    out = spike_matmul_pallas(s2, w2, block_m=block_m, block_k=block_k,
+                              block_n=block_n, interpret=interpret)
+    return out[:m, :n]
+
+
+def spike_conv(spikes, w, stride: int = 1, *, interpret: bool | None = None):
+    """NHWC spiking conv via im2col + event-driven matmul.
+
+    spikes [B,H,W,Cin] {0,1}, w [kh,kw,Cin,Cout].
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        spikes, (kh, kw), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b, ho, wo, _ = patches.shape
+    # conv_general_dilated_patches returns features ordered [Cin, kh, kw]
+    lhs = patches.reshape(b * ho * wo, cin * kh * kw)
+    rhs = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = spike_matmul(lhs, rhs, interpret=interpret)
+    return out.reshape(b, ho, wo, cout)
+
+
+# ---- flash attention ---------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    interpret: bool | None = None, block_q: int = 128,
+                    block_k: int = 128):
+    """q [B,H,S,D], k/v [B,Hkv,S,D]; pads S to block and D to 128 multiples."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)          # scale by TRUE head dim before padding
+    blk = max(block_q, block_k)
+    q2, pad_s = _pad_to(q, blk, 2)
+    k2, _ = _pad_to(k, blk, 2)
+    v2, _ = _pad_to(v, blk, 2)
+    q2, pad_d = _pad_to(q2, 128, 3)
+    k2, _ = _pad_to(k2, 128, 3)
+    v2, _ = _pad_to(v2, 128, 3)
+    # padded kv rows must never win the softmax: causal masking handles the
+    # padded q rows; padded k rows are excluded because kpos > qpos for real q.
+    if not causal and pad_s:
+        raise ValueError("non-causal attention requires S % block == 0")
+    out = flash_attention_pallas(q2, k2, v2, causal=causal, window=window,
+                                 scale=scale, block_q=min(block_q, q2.shape[2]),
+                                 block_k=min(block_k, k2.shape[2]),
+                                 interpret=interpret)
+    return out[:, :, :s, :d]

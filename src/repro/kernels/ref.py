@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are swept against in
+``tests/test_kernels.py`` (shapes × dtypes, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_ref(u, s_prev, current, *, threshold: float = 1.0, decay: float = 0.5,
+            reset: str = "hard"):
+    """Fused LIF update oracle (matches repro.snn.neurons.lif_step forward)."""
+    u32, s32, c32 = (x.astype(jnp.float32) for x in (u, s_prev, current))
+    if reset == "hard":
+        u_new = decay * u32 * (1.0 - s32) + c32
+    else:
+        u_new = decay * u32 - threshold * s32 + c32
+    s_new = (u_new > threshold).astype(u.dtype)
+    return u_new.astype(u.dtype), s_new
+
+
+def spike_matmul_ref(spikes, w):
+    """spikes [M, K] in {0,1} × w [K, N] -> [M, N] (fp32 accumulation)."""
+    return jnp.dot(spikes.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(w.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """q [B,H,S,D], k/v [B,Hkv,S,D] -> [B,H,S,D]. GQA via head repeat.
+
+    fp32 softmax; optional causal and sliding-window masking.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

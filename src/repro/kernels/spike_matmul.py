@@ -1,0 +1,73 @@
+"""Event-driven spike matmul kernel (Pallas, TPU target).
+
+TPU adaptation of the paper's FP-engine "selector + adder" spiking convolution
+(DESIGN.md §2). Per-synapse select/add does not map to the MXU; the transferable
+insight is *event-driven skipping at tile granularity*: spike activations are mostly
+zero (typ. 5–20% density), so whole (bm × bk) spike tiles are frequently all-zero,
+and for those the (bk × bn) weight-tile matmul contributes nothing.
+
+The kernel tiles ``spikes [M,K] @ W [K,N]`` on a (m, n, k) grid with fp32 VMEM
+accumulation and guards the MXU pass of each k-step with ``@pl.when(any(spike
+tile != 0))``. On real TPU the win is the skipped MXU pass (the weight-tile DMA still
+runs under automatic BlockSpec pipelining — a fully event-driven DMA needs manual
+``make_async_copy`` and is noted as future work in DESIGN.md). Density-dependent
+speedup is modeled in `benchmarks/spike_kernel.py`; correctness (incl. the skip path)
+is swept against ``ref.spike_matmul_ref``.
+
+im2col note: spiking convs lower to this kernel via patch extraction in ops.py
+(``spike_conv``), keeping the binary structure of the lhs intact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spike_mm_kernel(s_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s_blk = s_ref[...]
+    # Event-driven guard: skip the MXU pass for an all-zero spike tile.
+    has_events = jnp.any(s_blk != 0)
+
+    @pl.when(has_events)
+    def _mxu():
+        acc_ref[...] += jnp.dot(s_blk.astype(jnp.float32),
+                                w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spike_matmul_pallas(spikes, w, *, block_m: int = 128, block_k: int = 128,
+                        block_n: int = 128, interpret: bool = False):
+    """spikes [M,K] (values in {0,1}) @ w [K,N] -> [M,N] in w.dtype."""
+    m, k = spikes.shape
+    k2, n = w.shape
+    assert k == k2, (spikes.shape, w.shape)
+    bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
+    if m % bm or k % bk or n % bn:
+        raise ValueError(
+            f"dims ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})")
+    n_k = k // bk
+    kern = functools.partial(_spike_mm_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(spikes, w)

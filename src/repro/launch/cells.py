@@ -1,0 +1,240 @@
+"""Build the jit-able step + ShapeDtypeStruct inputs + shardings for every
+(architecture × input-shape) dry-run cell.
+
+``build_cell(arch, shape, mesh)`` returns a :class:`Cell` whose ``lower()`` produces
+the lowered computation with **no array allocation anywhere** (params, optimizer
+state, caches and batch are all ShapeDtypeStructs) — a 671B model lowers on a laptop.
+The same builder, pointed at real arrays, drives launch/train.py and launch/serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import SHAPES, active_param_count, get_config
+from ..models import encdec, lm
+from ..models.encdec import EncDecConfig
+from ..models.specs import ParamSpec, n_params, shape_structs
+from ..sharding import rules as R
+from ..train.optim import AdamWConfig
+from ..train.step import TrainConfig, make_train_step, optimizer_specs
+
+FSDP_THRESHOLD = 2e9           # params above this get ZeRO-3-style sharding
+INT8_OPT_THRESHOLD = 1e11      # moments in int8 above this (deepseek-v3)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    n_params: int
+    n_active_params: float
+    model_flops: float           # 6ND (train) / 2ND (serve) per step, global
+    mesh: Any
+    fsdp: bool
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        with self.mesh:
+            return self.jitted().lower(*self.args)
+
+
+def _pick_rules(cfg, mesh, fsdp: bool, kind: str):
+    rules = dict(R.FSDP_RULES if fsdp else R.BASE_RULES)
+    model_size = mesh.shape.get("model", 1)
+    kv = getattr(cfg, "n_kv_heads", 0)
+    if kind in ("decode", "prefill"):
+        if kv and kv % model_size == 0:
+            rules["cache_seq"] = ()          # prefer head-sharded caches
+    if getattr(cfg, "prefer_dp", False):
+        # small models: use the model axis as extra DP; params ZeRO over model
+        rules["batch"] = (("pod", "data", "model"), ("pod", "data"))
+        rules["cache_batch"] = rules["batch"]
+        for ax in ("heads", "kv_heads", "mlp", "vocab", "expert"):
+            rules[ax] = ()
+        rules["embed"] = ("model",)
+    return rules
+
+
+def _batch_sharding(mesh, ndim, batch_size=None):
+    return NamedSharding(mesh, R.batch_partition(mesh, ndim,
+                                                 batch_size=batch_size))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch: str, shape_name: str, mesh, fsdp: bool | None = None,
+               cfg=None, overrides: dict | None = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    is_encdec = isinstance(cfg, EncDecConfig)
+    specs = encdec.encdec_specs(cfg) if is_encdec else lm.lm_specs(cfg)
+    np_total = n_params(specs)
+    if fsdp is None:
+        fsdp = np_total > FSDP_THRESHOLD
+    rules = _pick_rules(cfg, mesh, fsdp, shape.kind)
+    p_shard = R.tree_shardings(mesh, specs, rules)
+    p_structs = shape_structs(specs)
+    n_active = active_param_count(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        state_dtype = "int8" if np_total > INT8_OPT_THRESHOLD else "fp32"
+        tcfg = TrainConfig(adam=AdamWConfig(lr=3e-4, grad_clip=1.0,
+                                            state_dtype=state_dtype))
+        o_specs = optimizer_specs(specs, tcfg)
+        o_shard = R.tree_shardings(mesh, o_specs, rules)
+        o_structs = shape_structs(o_specs)
+
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        lab = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if is_encdec:
+            half = s // 2
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, half), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, half), jnp.int32),
+            }
+
+            def loss_fn(params, bt):
+                return encdec.encdec_loss(params, cfg, bt["frames"],
+                                          bt["tokens"], bt["labels"])
+        elif cfg.prefix_len:
+            text = s - cfg.prefix_len
+            batch = {
+                "prefix": jax.ShapeDtypeStruct((b, cfg.prefix_len, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+            }
+
+            def loss_fn(params, bt):
+                return lm.lm_loss(params, cfg, bt["tokens"], bt["labels"],
+                                  bt["prefix"])
+        else:
+            batch = {"tokens": tok, "labels": lab}
+
+            def loss_fn(params, bt):
+                return lm.lm_loss(params, cfg, bt["tokens"], bt["labels"])
+
+        raw_step = make_train_step(loss_fn, tcfg)
+        seq_shard = bool(getattr(cfg, "seq_shard_attn", False))
+        extra_dp = bool(getattr(cfg, "prefer_dp", False))
+
+        def step(params, opt_state, bt):
+            with R.set_context(mesh, seq_shard=seq_shard, extra_dp=extra_dp):
+                return raw_step(params, opt_state, bt)
+
+        batch_axes = (("pod", "data", "model") if extra_dp
+                      else R.BATCH_AXES)
+        b_shard = jax.tree_util.tree_map(
+            lambda st: NamedSharding(mesh, R.batch_partition(
+                mesh, len(st.shape), batch_size=st.shape[0],
+                axes=batch_axes)), batch)
+        tokens_per_step = b * s
+        return Cell(arch, shape_name, "train", step,
+                    (p_structs, o_structs, batch),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, None),
+                    donate_argnums=(0, 1),
+                    n_params=np_total, n_active_params=n_active,
+                    model_flops=6.0 * n_active * tokens_per_step,
+                    mesh=mesh, fsdp=fsdp)
+
+    # ---- serving shapes ----
+    if is_encdec:
+        enc_len = s // 2 if shape.kind == "prefill" else 4096
+        dec_len = s // 2 if shape.kind == "prefill" else s
+        c_specs = encdec.cache_specs(cfg, b, dec_len, enc_len)
+    else:
+        c_specs = lm.cache_specs(cfg, b, s)
+    c_shard = R.tree_shardings(mesh, c_specs, rules)
+    c_structs = shape_structs(c_specs)
+
+    if shape.kind == "prefill":
+        if is_encdec:
+            args = ({"frames": jax.ShapeDtypeStruct((b, enc_len, cfg.d_model),
+                                                    jnp.bfloat16),
+                     "tokens": jax.ShapeDtypeStruct((b, dec_len), jnp.int32)},
+                    c_structs)
+
+            def step(params, batch, cache):
+                with R.set_context(mesh):
+                    return encdec.prefill(params, cfg, batch["frames"],
+                                          batch["tokens"], cache)
+        elif cfg.prefix_len:
+            text = s - cfg.prefix_len
+            args = ({"prefix": jax.ShapeDtypeStruct((b, cfg.prefix_len,
+                                                     cfg.d_model),
+                                                    jnp.bfloat16),
+                     "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32)},
+                    c_structs)
+
+            def step(params, batch, cache):
+                with R.set_context(mesh,
+                                   seq_shard=getattr(cfg, "seq_shard_attn",
+                                                     False)):
+                    return lm.prefill(params, cfg, batch["tokens"], cache,
+                                      batch["prefix"])
+        else:
+            args = ({"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)},
+                    c_structs)
+
+            def step(params, batch, cache):
+                with R.set_context(mesh,
+                                   seq_shard=getattr(cfg, "seq_shard_attn",
+                                                     False)):
+                    return lm.prefill(params, cfg, batch["tokens"], cache)
+
+        b_shard = jax.tree_util.tree_map(
+            lambda st: _batch_sharding(mesh, len(st.shape), st.shape[0]),
+            args[0])
+        return Cell(arch, shape_name, "prefill", step,
+                    (p_structs,) + args,
+                    (p_shard, b_shard, c_shard),
+                    (None, c_shard),
+                    donate_argnums=(2,),
+                    n_params=np_total, n_active_params=n_active,
+                    model_flops=2.0 * n_active * b * s,
+                    mesh=mesh, fsdp=fsdp)
+
+    # ---- decode ----
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if is_encdec:
+        def step(params, cache, token, pos):
+            with R.set_context(mesh):
+                return encdec.decode_step(params, cfg, cache, token, pos)
+    else:
+        def step(params, cache, token, pos):
+            with R.set_context(mesh):
+                return lm.decode_step(params, cfg, cache, token, pos)
+    return Cell(arch, shape_name, "decode", step,
+                (p_structs, c_structs, tok, pos),
+                (p_shard, c_shard, _batch_sharding(mesh, 2, b),
+                 _replicated(mesh)),
+                (None, c_shard),
+                donate_argnums=(1,),
+                n_params=np_total, n_active_params=n_active,
+                model_flops=2.0 * n_active * b,
+                mesh=mesh, fsdp=fsdp)

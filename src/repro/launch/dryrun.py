@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) combination:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` on the production mesh —
+proving the sharding config is coherent end-to-end — then record
+``memory_analysis()`` (fits-per-device evidence), ``cost_analysis()``
+(FLOPs / bytes for §Roofline) and the parsed collective byte totals from the
+post-SPMD HLO. Results land as JSON in results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax  # noqa: E402  (device count fixed by the XLA_FLAGS line above)
+
+from ..configs.registry import cells as all_cells
+from ..core.hlo_analysis import analyze_hlo
+from .cells import build_cell
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# TPU v5e constants (roofline):
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             overrides=None, tag: str = "") -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False,
+           "tag": tag}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.size
+        cell = build_cell(arch, shape, mesh, overrides=overrides)
+        t1 = time.time()
+        lowered = cell.lower()
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # structural walker: xla's cost_analysis counts while bodies ONCE;
+        # analyze_hlo multiplies by known_trip_count (see core/hlo_analysis.py)
+        st = analyze_hlo(hlo)
+        coll = st["collectives"]
+
+        flops_dev = float(st["flops"])
+        bytes_dev = float(st["bytes"])
+        rec.update({
+            "ok": True,
+            "kind": cell.kind,
+            "fsdp": cell.fsdp,
+            "n_chips": n_chips,
+            "n_params": cell.n_params,
+            "n_active_params": cell.n_active_params,
+            "model_flops": cell.model_flops,
+            "build_s": round(t1 - t0, 2),
+            "lower_s": round(t2 - t1, 2),
+            "compile_s": round(t3 - t2, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                          + ma.output_size_in_bytes
+                                          + ma.temp_size_in_bytes
+                                          - ma.alias_size_in_bytes),
+            },
+            "cost": {"flops_per_device": flops_dev,
+                     "bytes_per_device": bytes_dev,
+                     "n_dots": st["n_dots"],
+                     "unknown_trip_whiles": st["unknown_trip_whiles"],
+                     "xla_flops_single_visit": float(ca.get("flops", 0.0)),
+                     "xla_bytes_single_visit": float(
+                         ca.get("bytes accessed", 0.0))},
+            "collectives": coll,
+            "roofline": roofline_terms(flops_dev, bytes_dev, coll,
+                                       cell.model_flops, n_chips),
+        })
+    except Exception as e:  # noqa: BLE001 - record failures as data
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float, coll: dict,
+                   model_flops: float, n_chips: int) -> dict:
+    """Three-term roofline (per step, seconds)."""
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_operand_t = coll["operand_bytes"] / LINK_BW
+    coll_wire_t = coll["wire_bytes"] / LINK_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_operand_t,
+             "collective_wire_s": coll_wire_t}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    bound = max(compute_t, memory_t, coll_operand_t)
+    ideal = (model_flops / n_chips) / PEAK_FLOPS
+    terms.update({
+        "dominant": dom,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_chips)
+                               if flops_dev else 0.0),
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+        "ideal_compute_s": ideal,
+    })
+    return terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config overrides, e.g. --override remat=full")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v.isdigit():
+            v = int(v)
+        elif v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+    overrides = overrides or None
+
+    todo = []
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    if args.all:
+        for c in all_cells():
+            if c["skip"]:
+                print(f"SKIP {c['arch']} x {c['shape']}: {c['skip']}")
+                continue
+            for mp in meshes:
+                todo.append((c["arch"], c["shape"], mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    n_ok = 0
+    for arch, shape, mp in todo:
+        mesh_name = "multipod" if mp else "pod"
+        suffix = f"_{args.tag}" if args.tag else ""
+        path = os.path.join(args.out_dir,
+                            f"{arch}__{shape}__{mesh_name}{suffix}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    print(f"CACHED {arch} x {shape} x {mesh_name}")
+                    n_ok += 1
+                    continue
+        rec = run_cell(arch, shape, mp, args.out_dir, overrides=overrides,
+                       tag=args.tag)
+        if rec["ok"]:
+            n_ok += 1
+            r = rec["roofline"]
+            print(f"OK   {arch} x {shape} x {mesh_name}: "
+                  f"compile={rec['compile_s']}s "
+                  f"mem={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+            print(compiled_summary(rec))
+        else:
+            print(f"FAIL {arch} x {shape} x {mesh_name}: {rec['error']}")
+    print(f"{n_ok}/{len(todo)} cells OK")
+
+
+def compiled_summary(rec) -> str:
+    m = rec["memory"]
+    c = rec["collectives"]
+    return ("  memory_analysis: args=%.2fGiB out=%.2fGiB temp=%.2fGiB | "
+            "cost: %.3e flops/dev | collectives: %d ops %.2fMiB operands" % (
+                m["argument_bytes"] / 2**30, m["output_bytes"] / 2**30,
+                m["temp_bytes"] / 2**30, rec["cost"]["flops_per_device"],
+                c["n_ops"], c["operand_bytes"] / 2**20))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction (+ placement-optimized device ordering).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches jax
+device state). Single pod: (16, 16) over ("data", "model"); multi-pod: (2, 16, 16)
+over ("pod", "data", "model") — 512 chips.
+
+``placement`` optionally reorders the device list with an assignment produced by the
+paper's optimizer (``repro.core.tpu_adapter.optimize_device_order``): logical mesh
+position i is served by physical chip placement[i]. On the CPU dry-run host the
+reordering is semantically inert but exercises exactly the code path a TPU deployment
+uses; its ICI effect is scored by the NoC model in benchmarks/tpu_placement.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False, placement=None,
+                         devices=None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if placement is None and devices is None:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    devices = list(jax.devices() if devices is None else devices)
+    n = int(np.prod(shape))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    devices = devices[:n]
+    if placement is not None:
+        devices = [devices[int(p)] for p in np.asarray(placement)]
+    dev_array = np.asarray(devices, dtype=object).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over however many host devices the test process has."""
+    n = int(np.prod(shape))
+    devs = jax.devices()[:n]
+    return Mesh(np.asarray(devs, dtype=object).reshape(shape), axes)

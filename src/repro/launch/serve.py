@@ -1,0 +1,81 @@
+"""Serving launcher: batched prefill + decode with KV/state caches.
+
+Drives the same ``prefill`` / ``decode_step`` entry points the dry-run lowers, with a
+simple continuous-batching front: requests arrive with prompts, are batched, prefilled
+once, then decoded step-locked. Greedy or temperature sampling.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import get_config, get_smoke_config
+from ..models import encdec, lm
+from ..models.encdec import EncDecConfig
+from ..models.specs import materialize
+
+
+def generate(params, cfg, prompts, gen_len: int, max_len: int | None = None,
+             temperature: float = 0.0, seed: int = 0):
+    """prompts [B, P] int32 -> tokens [B, P+gen_len]. Greedy if temperature=0."""
+    b, p = prompts.shape
+    max_len = max_len or (p + gen_len)
+    cache = materialize(jax.random.PRNGKey(0), lm.cache_specs(cfg, b, max_len))
+    prefill_j = jax.jit(lambda pa, t, c: lm.prefill(pa, cfg, t, c))
+    decode_j = jax.jit(lambda pa, c, t, i: lm.decode_step(pa, cfg, c, t, i),
+                       donate_argnums=(1,))
+    logits, cache = prefill_j(params, prompts, cache)
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+    tok = None
+    for i in range(gen_len):
+        if temperature > 0:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits[:, -1] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok.astype(jnp.int32))
+        logits, cache = decode_j(params, cache, tok.astype(jnp.int32),
+                                 jnp.int32(p + i))
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if isinstance(cfg, EncDecConfig):
+        raise SystemExit("use examples/seamless_serve for enc-dec serving")
+    params = materialize(jax.random.PRNGKey(args.seed), lm.lm_specs(cfg))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (args.batch, args.prompt_len)),
+                          jnp.int32)
+    t0 = time.time()
+    toks = generate(params, cfg, prompts, args.gen_len,
+                    temperature=args.temperature, seed=args.seed)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen_len
+    print(f"generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s incl. prefill)")
+    print("sample:", np.asarray(toks[0, -args.gen_len:]).tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

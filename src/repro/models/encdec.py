@@ -1,0 +1,231 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/text frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings [B, S_enc, d] straight into the encoder. Encoder is
+bidirectional; decoder layers are causal self-attention + cross-attention + SwiGLU.
+Serving caches: decoder self-attn KV + precomputed cross-attn K/V of the encoded
+source.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .lm import _maybe_remat, _stack, _token_ce  # shared helpers
+from .specs import ParamSpec, param
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    n_enc_layers: int
+    n_dec_layers: int
+    rope_theta: float = 1e4
+    param_dtype = jnp.bfloat16
+    dtype = jnp.bfloat16
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    remat: str = "none"
+    window = None
+    logit_chunk: int = 0
+    segments = ()          # LM-compat fields used by shared helpers
+    n_layers_prop = None
+
+    @property
+    def n_layers(self):
+        return self.n_enc_layers + self.n_dec_layers
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "norm1": L.rmsnorm_specs(cfg.d_model),
+        "attn": L.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.d_head, cfg.param_dtype),
+        "norm2": L.rmsnorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _dec_layer_specs(cfg):
+    return {
+        "norm1": L.rmsnorm_specs(cfg.d_model),
+        "self_attn": L.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.d_head, cfg.param_dtype),
+        "norm_x": L.rmsnorm_specs(cfg.d_model),
+        "cross_attn": L.attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.d_head, cfg.param_dtype),
+        "norm2": L.rmsnorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def encdec_specs(cfg: EncDecConfig):
+    return {
+        "embed": L.embed_specs(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc": _stack(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "dec": _stack(_dec_layer_specs(cfg), cfg.n_dec_layers),
+        "enc_norm": L.rmsnorm_specs(cfg.d_model),
+        "final_norm": L.rmsnorm_specs(cfg.d_model),
+        "head": param((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                      dtype=cfg.param_dtype, scale=0.02),
+    }
+
+
+def cache_specs(cfg: EncDecConfig, batch: int, max_len: int, enc_len: int):
+    kv = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    ax = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+    ckv = (batch, enc_len, cfg.n_kv_heads, cfg.d_head)
+    per_dec = {
+        "k": ParamSpec(kv, cfg.dtype, ax, "zeros"),
+        "v": ParamSpec(kv, cfg.dtype, ax, "zeros"),
+        "xk": ParamSpec(ckv, cfg.dtype, ax, "zeros"),
+        "xv": ParamSpec(ckv, cfg.dtype, ax, "zeros"),
+    }
+    return {"dec": _stack(per_dec, cfg.n_dec_layers)}
+
+
+def _attn_qkv(p, x, positions, cfg, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def encode(params, cfg: EncDecConfig, frames):
+    """frames [B,S_enc,d] -> encoded [B,S_enc,d] (bidirectional)."""
+    x = frames.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def layer(x, p):
+        h = L.rmsnorm(p["norm1"], x)
+        q, k, v = _attn_qkv(p["attn"], h, positions, cfg)
+        y = L.blockwise_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                                  k_chunk=cfg.k_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", y, p["attn"]["wo"])
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["norm2"], x))
+        return x
+
+    body = _maybe_remat(layer, cfg)
+    x, _ = jax.lax.scan(lambda xx, p: (body(xx, p), None), x, params["enc"])
+    return L.rmsnorm(params["enc_norm"], x)
+
+
+def _dec_layer(p, cfg, x, enc_out, positions, cache, pos):
+    """One decoder layer; cache None (train) or dict (prefill/decode)."""
+    h = L.rmsnorm(p["norm1"], x)
+    y, new_self = L.attention_block(p["self_attn"], h, positions, cfg, cache
+                                    and {"k": cache["k"], "v": cache["v"]}, pos)
+    x = x + y
+    # cross attention
+    h = L.rmsnorm(p["norm_x"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+    if cache is not None and x.shape[1] == 1:
+        xk, xv = cache["xk"], cache["xv"]
+    else:
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wv"])
+    y = L.blockwise_attention(q, xk, xv, causal=False, q_chunk=cfg.q_chunk,
+                              k_chunk=cfg.k_chunk)
+    x = x + jnp.einsum("bshk,hkd->bsd", y, p["cross_attn"]["wo"])
+    x = x + L.mlp(p["mlp"], L.rmsnorm(p["norm2"], x))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": new_self["k"], "v": new_self["v"], "xk": xk, "xv": xv}
+    return x, new_cache
+
+
+def decode_train(params, cfg: EncDecConfig, tokens, enc_out):
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    body = _maybe_remat(
+        lambda xx, p: _dec_layer(p, cfg, xx, enc_out, positions, None, None)[0],
+        cfg)
+    x, _ = jax.lax.scan(lambda xx, p: (body(xx, p), None), x, params["dec"])
+    x = L.rmsnorm(params["final_norm"], x)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"])
+
+
+def decode_train_hidden(params, cfg: EncDecConfig, tokens, enc_out):
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    body = _maybe_remat(
+        lambda xx, p: _dec_layer(p, cfg, xx, enc_out, positions, None, None)[0],
+        cfg)
+    x, _ = jax.lax.scan(lambda xx, p: (body(xx, p), None), x, params["dec"])
+    return L.rmsnorm(params["final_norm"], x)
+
+
+def encdec_loss(params, cfg: EncDecConfig, frames, tokens, labels):
+    enc_out = encode(params, cfg, frames)
+    hidden = decode_train_hidden(params, cfg, tokens, enc_out)
+    chunk = cfg.logit_chunk
+    if chunk and hidden.shape[1] % chunk == 0:
+        # chunked CE: never materialize [B,S,256k-vocab] logits
+        nch = hidden.shape[1] // chunk
+        h_ch = hidden.reshape(hidden.shape[0], nch, chunk, -1)
+        l_ch = labels.reshape(labels.shape[0], nch, chunk)
+
+        def chunk_ce(carry, inp):
+            h, l = inp
+            logits = jnp.einsum("bsd,dv->bsv", h,
+                                params["head"]).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None],
+                                     axis=-1)[..., 0]
+            valid = l >= 0
+            return (carry[0] + jnp.where(valid, lse - ll, 0.0).sum(),
+                    carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(chunk_ce),
+            (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+            (h_ch.transpose(1, 0, 2, 3), l_ch.transpose(1, 0, 2)))
+        ce = tot / jnp.maximum(cnt, 1)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden, params["head"])
+        ce = _token_ce(logits, labels)
+    return ce, {"ce": ce, "aux": jnp.zeros(()), "mtp": jnp.zeros(())}
+
+
+def prefill(params, cfg: EncDecConfig, frames, tokens, cache):
+    enc_out = encode(params, cfg, frames)
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, inp):
+        xx = carry
+        p, c = inp
+        xx, nc = _dec_layer(p, cfg, xx, enc_out, positions, c, None)
+        return xx, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache["dec"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    return logits, {"dec": new_cache}
+
+
+def decode_step(params, cfg: EncDecConfig, cache, tokens, pos):
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+
+    def body(carry, inp):
+        xx = carry
+        p, c = inp
+        xx, nc = _dec_layer(p, cfg, xx, None, positions, c, pos)
+        return xx, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache["dec"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"]), {"dec": new_cache}

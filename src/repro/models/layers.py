@@ -1,0 +1,321 @@
+"""Shared transformer building blocks (pure JAX, spec-first params).
+
+Activation layout is **BSHD** ([batch, seq, heads, head_dim]) so GSPMD sharding rules
+stay uniform: batch -> (pod, data), heads -> model. Attention is computed blockwise
+(causal block skipping + online softmax over kv sub-chunks) so 32k-token prefill never
+materializes an S×S score matrix and causal FLOPs are ~halved vs naive masking — the
+pure-JAX counterpart of the Pallas flash kernel, and the differentiable training path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .specs import param
+
+NEG_INF = -1e30
+
+
+# ---- norms -------------------------------------------------------------------
+
+def rmsnorm_specs(d: int):
+    return {"scale": param((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---- rope ----------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x [..., S, H, D] (D even), positions [..., S] int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---- linear / embedding ---------------------------------------------------------
+
+def linear_specs(d_in: int, d_out: int, axes=("embed", "mlp"), dtype=jnp.bfloat16):
+    return {"w": param((d_in, d_out), axes, dtype=dtype)}
+
+
+def embed_specs(vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": param((vocab, d), ("vocab", "embed"), dtype=dtype, scale=0.02)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ---- SwiGLU MLP ------------------------------------------------------------------
+
+def mlp_specs(d: int, f: int, dtype=jnp.bfloat16):
+    return {
+        "w_gate": param((d, f), ("embed", "mlp"), dtype=dtype),
+        "w_up": param((d, f), ("embed", "mlp"), dtype=dtype),
+        "w_down": param((f, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+
+
+# ---- attention -------------------------------------------------------------------
+
+def attn_specs(d: int, n_heads: int, n_kv: int, d_head: int, dtype=jnp.bfloat16):
+    return {
+        "wq": param((d, n_heads, d_head), ("embed", "heads", "head_dim"),
+                    dtype=dtype),
+        "wk": param((d, n_kv, d_head), ("embed", "kv_heads", "head_dim"),
+                    dtype=dtype),
+        "wv": param((d, n_kv, d_head), ("embed", "kv_heads", "head_dim"),
+                    dtype=dtype),
+        "wo": param((n_heads, d_head, d), ("heads", "head_dim", "embed"),
+                    dtype=dtype),
+    }
+
+
+def _mask_scores(s, qpos, kpos, window, causal):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(mask, s, NEG_INF)
+
+
+# ---- flash attention with custom VJP (pure JAX) --------------------------------
+# The naive scan-based online softmax saves its (m, l, acc) carries for every kv
+# step during backprop — tens of GiB at 32k context. The flash backward instead
+# recomputes each kv block's scores from the saved (q, k, v, out, lse); memory
+# per layer collapses to one block's temporaries. Grouped-GQA einsums keep head
+# sharding intact.
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, qpos0: int, kpos0: int, window, causal: bool,
+           k_chunk: int):
+    out, _ = _flash_fwd_impl(q, k, v, qpos0, kpos0, window, causal, k_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, qpos0, kpos0, window, causal, k_chunk):
+    b, cq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    ck = min(k_chunk, skv)
+    if skv % ck:
+        ck = skv
+    n_sub = skv // ck
+    qg = q.reshape(b, cq, hkv, rep, d).astype(jnp.float32)
+    qpos = qpos0 + jnp.arange(cq)
+
+    def body(carry, inp):
+        m_run, l_run, acc_run = carry
+        k_blk, v_blk, idx = inp
+        kpos = kpos0 + idx * ck + jnp.arange(ck)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_blk.astype(jnp.float32))
+        s = _mask_scores(s * scale, qpos, kpos, window, causal)
+        m_b = s.max(axis=-1)
+        m_new = jnp.maximum(m_run, m_b)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc_new = acc_run * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    ks = k.reshape(b, n_sub, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_sub, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+    m0 = jnp.full((b, hkv, rep, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, cq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, cq, d), jnp.float32)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(body, (m0, l0, a0),
+                                        (ks, vs, jnp.arange(n_sub)))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out = (acc_f / l_safe[..., None])
+    lse = m_f + jnp.log(l_safe)                          # [B,G,R,cq]
+    out_b = out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, d).astype(q.dtype)
+    return out_b, lse
+
+
+def _flash_fwd(q, k, v, qpos0, kpos0, window, causal, k_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, qpos0, kpos0, window, causal, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(qpos0, kpos0, window, causal, k_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, cq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    ck = min(k_chunk, skv)
+    if skv % ck:
+        ck = skv
+    n_sub = skv // ck
+    qg = q.reshape(b, cq, hkv, rep, d).astype(jnp.float32)
+    og = out.reshape(b, cq, hkv, rep, d).astype(jnp.float32)
+    dog = dout.reshape(b, cq, hkv, rep, d).astype(jnp.float32)
+    qpos = qpos0 + jnp.arange(cq)
+    delta = jnp.einsum("bqgrd,bqgrd->bgrq", og, dog)      # rowsum(dO*O)
+
+    ks = k.reshape(b, n_sub, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_sub, ck, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def body(dq_acc, inp):
+        k_blk, v_blk, idx = inp
+        kpos = kpos0 + idx * ck + jnp.arange(ck)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_blk.astype(jnp.float32))
+        s = _mask_scores(s * scale, qpos, kpos, window, causal)
+        p = jnp.exp(s - lse[..., None])                   # exact softmax
+        dv_blk = jnp.einsum("bgrqk,bqgrd->bkgd", p, dog)
+        dp = jnp.einsum("bqgrd,bkgd->bgrqk", dog, v_blk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bgrqk,bkgd->bqgrd", ds,
+                                     k_blk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bgrqk,bqgrd->bkgd", ds, qg)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, cq, hkv, rep, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(n_sub)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, d)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, d)
+    return (dq.reshape(b, cq, h, d).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q, k, v, *, window: int | None = None,
+                        q_chunk: int = 1024, k_chunk: int = 1024,
+                        pos_offset: int = 0, causal: bool = True):
+    """Causal (optionally sliding-window) or bidirectional attention, BSHD.
+
+    q [B,S,H,D], k/v [B,Skv,HKV,D] with Skv == S + pos_offset (self-attention:
+    pos_offset=0; cross-attention: causal=False, any Skv). Python-loop over q
+    chunks with *static* kv ranges (skips never-visible blocks entirely => ~2x
+    FLOP saving vs masked-dense), inner ``lax.scan`` over kv sub-chunks with
+    online softmax (bounded memory).
+    """
+    b, s, h, d = q.shape
+    skv = k.shape[1]
+    cq = min(q_chunk, s)
+    if s % cq:
+        cq = s                       # small/odd seq: single chunk
+    outs = []
+    for qi in range(s // cq):
+        q_blk = jax.lax.slice_in_dim(q, qi * cq, (qi + 1) * cq, axis=1)
+        hi = pos_offset + (qi + 1) * cq if causal else skv
+        lo = 0
+        if window is not None:
+            lo = max(0, pos_offset + qi * cq - window + 1)
+        ck = min(k_chunk, hi - lo)
+        if hi % ck and (hi - lo) % ck:
+            ck = hi - lo             # non-aligned range: single sub-chunk
+        # align the static slice to sub-chunk multiples
+        n_sub = -(-(hi - lo) // ck)
+        lo_al = max(0, hi - n_sub * ck)
+        k_slice = jax.lax.slice_in_dim(k, lo_al, hi, axis=1)
+        v_slice = jax.lax.slice_in_dim(v, lo_al, hi, axis=1)
+        out = _flash(q_blk, k_slice, v_slice, pos_offset + qi * cq, lo_al,
+                     window, causal, ck)
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
+    """Single-step decode: q [B,1,H,D], caches [B,Smax,HKV,D], pos scalar int.
+
+    Masks cache entries beyond ``pos`` (exclusive of the current token, which the
+    caller has already written at index pos).
+    """
+    b, _, h, d = q.shape
+    smax = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    rep = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, rep, d)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(smax)
+    mask = kpos <= pos
+    if window is not None:
+        mask &= kpos > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_block(p, x, positions, cfg, cache=None, pos=None):
+    """Full GQA/SWA attention sublayer (no norm/residual — caller owns those).
+
+    Train/prefill: cache is None -> blockwise attention over x itself; if
+    ``cache`` is a dict it is FILLED (prefill) at [0, S).
+    Decode: cache given and x has S==1 -> read/update cache at ``pos``.
+    Returns (out [B,S,d_model], new_cache).
+
+    Sharding plays (cfg-driven, see DESIGN.md §5):
+    * ``repeat_kv``      — materialize GQA K/V at full head count so the score
+      tensors shard over q-heads even when n_kv_heads %% model_axis != 0,
+    * ``seq_shard_attn`` — sequence-parallel attention: q stays seq-sharded
+      (single q chunk), K/V are pinned seq-replicated (the one all-gather).
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is not None and s == 1:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        out = decode_attention(q, k_cache, v_cache, pos, window=cfg.window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1),
+            }
+        kk, vv = k, v
+        q_chunk = cfg.q_chunk
+        if getattr(cfg, "seq_shard_attn", False):
+            # gather K/V over the seq axis BEFORE any head repeat: the
+            # all-gather moves n_kv_heads-sized tensors (8x less for GQA)
+            from ..sharding.rules import kv_replicated_constraint
+            kk = kv_replicated_constraint(kk)
+            vv = kv_replicated_constraint(vv)
+            q_chunk = s                      # single seq-sharded q block
+        if getattr(cfg, "repeat_kv", False):
+            rep = q.shape[2] // k.shape[2]
+            kk = jnp.repeat(kk, rep, axis=2)
+            vv = jnp.repeat(vv, rep, axis=2)
+        out = blockwise_attention(q, kk, vv, window=cfg.window,
+                                  q_chunk=q_chunk, k_chunk=cfg.k_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache

@@ -1,0 +1,485 @@
+"""Generic decoder LM over heterogeneous block segments.
+
+A model is a tuple of :class:`Segment`s — (block kind, mlp kind, count). Consecutive
+layers inside a segment share structure, so their params are stacked on a leading
+"layers" axis and executed with ``lax.scan`` (small HLO even for 61-layer models,
+which is what keeps the 512-device dry-run compiles tractable). Hybrid models
+(zamba2) interleave a *shared-parameter* attention block every ``hybrid_period``
+layers via an outer scan over layer groups.
+
+Entry points:
+* ``forward``        — logits over full sequences (train / eval),
+* ``prefill``        — last-position logits + filled caches (serving),
+* ``decode_step``    — one token with KV/state caches (serving),
+* ``cache_specs``    — ParamSpec pytree of the serving caches (dry-run shardable).
+
+All block kinds carry a cache so SSM/attention hybrids compose freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M
+from . import xlstm as X
+from .mla import MLAConfig, mla_block, mla_specs
+from .moe import MoEConfig, moe_apply, moe_specs
+from .specs import ParamSpec, is_spec, param
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str              # attn | mla | mamba2 | mlstm | slstm
+    mlp: str               # dense | moe | none
+    count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    segments: tuple
+    window: int | None = None          # sliding-window attention
+    rope_theta: float = 1e4
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: M.SSMConfig | None = None
+    xlstm: X.XLSTMConfig | None = None
+    hybrid_period: int = 0             # zamba2: shared attn every N layers
+    hybrid_d_attn: int = 0             # shared-attn width (2*d for zamba2)
+    mtp: bool = False                  # deepseek multi-token prediction head
+    mtp_weight: float = 0.3
+    param_dtype: Any = jnp.bfloat16
+    dtype: Any = jnp.bfloat16
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    remat: str = "none"                # none | full | dots
+    seq_shard_attn: bool = False       # heads not divisible by model axis
+    repeat_kv: bool = False            # GQA kv heads not divisible: repeat
+    prefer_dp: bool = False            # small models: batch over data x model
+    logit_chunk: int = 0               # chunked CE (0 = off)
+    prefix_len: int = 0                # vlm: image tokens prepended
+    tie_embeddings: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.count for s in self.segments)
+
+
+# ------------------------------------------------------------------ specs ----
+
+def _stack(specs, count: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((count,) + s.shape, s.dtype, ("layers",) + s.axes,
+                            s.init, s.scale), specs, is_leaf=is_spec)
+
+
+def _layer_specs(cfg: LMConfig, seg: Segment):
+    d, dt = cfg.d_model, cfg.param_dtype
+    out = {"norm1": L.rmsnorm_specs(d)}
+    if seg.kind == "attn":
+        out["attn"] = L.attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, dt)
+    elif seg.kind == "mla":
+        out["attn"] = mla_specs(d, cfg.n_heads, cfg.mla, dt)
+    elif seg.kind == "mamba2":
+        out["mix"] = M.mamba_specs(d, cfg.ssm, dt)
+    elif seg.kind == "mlstm":
+        out["mix"] = X.mlstm_specs(d, cfg.xlstm, dt)
+    elif seg.kind == "slstm":
+        out["mix"] = X.slstm_specs(d, cfg.xlstm, dt)
+    else:
+        raise ValueError(seg.kind)
+    if seg.mlp == "dense":
+        out["norm2"] = L.rmsnorm_specs(d)
+        out["mlp"] = L.mlp_specs(d, cfg.d_ff, dt)
+    elif seg.mlp == "moe":
+        out["norm2"] = L.rmsnorm_specs(d)
+        out["mlp"] = moe_specs(d, cfg.moe, dt)
+    return out
+
+
+def _shared_block_specs(cfg: LMConfig):
+    """Zamba2-style shared attention+MLP block over concat(x, emb)."""
+    da = cfg.hybrid_d_attn or 2 * cfg.d_model
+    dh = da // cfg.n_heads
+    return {
+        "norm1": L.rmsnorm_specs(da),
+        "attn": {
+            "wq": param((da, cfg.n_heads, dh), ("embed", "heads", "head_dim"),
+                        dtype=cfg.param_dtype),
+            "wk": param((da, cfg.n_kv_heads, dh), ("embed", "kv_heads",
+                                                   "head_dim"),
+                        dtype=cfg.param_dtype),
+            "wv": param((da, cfg.n_kv_heads, dh), ("embed", "kv_heads",
+                                                   "head_dim"),
+                        dtype=cfg.param_dtype),
+            "wo": param((cfg.n_heads, dh, cfg.d_model),
+                        ("heads", "head_dim", "embed"), dtype=cfg.param_dtype),
+        },
+        "norm2": L.rmsnorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def lm_specs(cfg: LMConfig):
+    out = {"embed": L.embed_specs(cfg.vocab, cfg.d_model, cfg.param_dtype),
+           "final_norm": L.rmsnorm_specs(cfg.d_model)}
+    for i, seg in enumerate(cfg.segments):
+        out[f"seg{i}"] = _stack(_layer_specs(cfg, seg), seg.count)
+    if cfg.hybrid_period:
+        out["shared"] = _shared_block_specs(cfg)
+    if not cfg.tie_embeddings:
+        out["head"] = param((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                            dtype=cfg.param_dtype, scale=0.02)
+    if cfg.mtp:
+        out["mtp"] = {
+            "norm_h": L.rmsnorm_specs(cfg.d_model),
+            "norm_e": L.rmsnorm_specs(cfg.d_model),
+            "proj": param((2 * cfg.d_model, cfg.d_model), ("mlp", "embed"),
+                          dtype=cfg.param_dtype),
+            "layer": _layer_specs(cfg, Segment(
+                "mla" if cfg.mla else "attn", "dense", 1)),
+        }
+    return out
+
+
+# ----------------------------------------------------------------- caches ----
+
+def _layer_cache_specs(cfg: LMConfig, seg: Segment, batch: int, max_len: int):
+    d = cfg.d_model
+    if seg.kind == "attn":
+        shp = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        axes = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+        return {"k": ParamSpec(shp, cfg.dtype, axes, "zeros"),
+                "v": ParamSpec(shp, cfg.dtype, axes, "zeros")}
+    if seg.kind == "mla":
+        m = cfg.mla
+        return {
+            "ckv": ParamSpec((batch, max_len, m.kv_lora_rank), cfg.dtype,
+                             ("cache_batch", "cache_seq", "kv_lora"), "zeros"),
+            "kr": ParamSpec((batch, max_len, m.qk_rope_dim), cfg.dtype,
+                            ("cache_batch", "cache_seq", "head_dim"), "zeros"),
+        }
+    if seg.kind == "mamba2":
+        s = cfg.ssm
+        h = M.n_heads_ssm(d, s)
+        conv_ch = M.d_inner(d, s) + 2 * s.n_groups * s.d_state
+        return {
+            "h": ParamSpec((batch, h, s.head_dim, s.d_state), jnp.float32,
+                           ("cache_batch", "heads", "head_dim", "ssm_state"),
+                           "zeros"),
+            "conv": ParamSpec((batch, s.d_conv - 1, conv_ch), cfg.dtype,
+                              ("cache_batch", "conv_k", "mlp"), "zeros"),
+        }
+    if seg.kind == "mlstm":
+        xc = cfg.xlstm
+        di = int(d * xc.up_factor)
+        dh = di // xc.n_heads
+        ax = ("cache_batch", "heads", "head_dim", "head_dim2")
+        return {"c": ParamSpec((batch, xc.n_heads, dh, dh), jnp.float32, ax,
+                               "zeros"),
+                "n": ParamSpec((batch, xc.n_heads, dh), jnp.float32, ax[:3],
+                               "zeros"),
+                "m": ParamSpec((batch, xc.n_heads), jnp.float32, ax[:2],
+                               "zeros")}
+    if seg.kind == "slstm":
+        xc = cfg.xlstm
+        dh = d // xc.n_heads
+        ax = ("cache_batch", "heads", "head_dim")
+        return {k: ParamSpec((batch, xc.n_heads, dh), jnp.float32, ax, "zeros")
+                for k in ("h", "c", "n", "m")}
+    raise ValueError(seg.kind)
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_len: int):
+    out = {}
+    for i, seg in enumerate(cfg.segments):
+        out[f"seg{i}"] = _stack(_layer_cache_specs(cfg, seg, batch, max_len),
+                                seg.count)
+    if cfg.hybrid_period:
+        n_shared = sum(s.count for s in cfg.segments) // cfg.hybrid_period
+        da = cfg.hybrid_d_attn or 2 * cfg.d_model
+        dh = da // cfg.n_heads
+        shp = (batch, max_len, cfg.n_kv_heads, dh)
+        axes = ("cache_batch", "cache_seq", "kv_heads", "head_dim")
+        out["shared"] = {
+            "k": ParamSpec((n_shared,) + shp, cfg.dtype, ("layers",) + axes,
+                           "zeros"),
+            "v": ParamSpec((n_shared,) + shp, cfg.dtype, ("layers",) + axes,
+                           "zeros")}
+    return out
+
+
+# ---------------------------------------------------------------- forward ----
+
+def _maybe_remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+def _constrain_batch(x):
+    """Annotate batch sharding on activations (rules applied by the runtime)."""
+    from ..sharding.rules import activation_constraint
+    return activation_constraint(x)
+
+
+def _layer_fwd(p, seg: Segment, cfg: LMConfig, x, positions, cache, pos):
+    new_cache = None
+    h = L.rmsnorm(p["norm1"], x)
+    if seg.kind == "attn":
+        y, new_cache = L.attention_block(p["attn"], h, positions, cfg, cache,
+                                         pos)
+    elif seg.kind == "mla":
+        y, new_cache = mla_block(p["attn"], h, positions, cfg, cache, pos)
+    elif seg.kind == "mamba2":
+        y, new_cache = M.mamba_block(p["mix"], h, cfg, cfg.ssm, cache)
+    elif seg.kind == "mlstm":
+        y, new_cache = X.mlstm_block(p["mix"], h, cfg.xlstm, cache)
+    elif seg.kind == "slstm":
+        y, new_cache = X.slstm_block(p["mix"], h, cfg.xlstm, cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if seg.mlp == "dense":
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["norm2"], x))
+    elif seg.mlp == "moe":
+        y, aux = moe_apply(p["mlp"], L.rmsnorm(p["norm2"], x), cfg.moe)
+        x = x + y
+    return _constrain_batch(x), aux, new_cache
+
+
+def _shared_block_fwd(p, cfg: LMConfig, x, emb, positions, cache, pos):
+    """Zamba2 shared block: attention over concat(x, emb) + MLP, residual to x."""
+    cat = jnp.concatenate([x, emb], axis=-1)
+    h = L.rmsnorm(p["norm1"], cat)
+    y, new_cache = L.attention_block(p["attn"], h, positions, cfg, cache, pos)
+    x = x + y
+    x = x + L.mlp(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return _constrain_batch(x), new_cache
+
+
+def _run_segment(p_stack, seg: Segment, cfg: LMConfig, x, positions,
+                 cache=None, pos=None, shared=None, emb=None,
+                 shared_cache=None):
+    """Scan over a segment's stacked layers. Returns (x, aux, new_cache,
+    new_shared_cache)."""
+    body = _maybe_remat(
+        lambda xx, pl, cl: _layer_fwd(pl, seg, cfg, xx, positions, cl, pos), cfg)
+
+    if cfg.hybrid_period and seg.kind == "mamba2":
+        per = cfg.hybrid_period
+        groups = seg.count // per
+        p_g = jax.tree_util.tree_map(
+            lambda a: a.reshape((groups, per) + a.shape[1:]), p_stack)
+        c_g = None
+        if cache is not None:
+            c_g = jax.tree_util.tree_map(
+                lambda a: a.reshape((groups, per) + a.shape[1:]), cache)
+
+        def group_body(carry, inp):
+            xx, aux = carry
+            pg, cg, sc = inp
+
+            def inner(c2, inp2):
+                xx2, aux2 = c2
+                pl, cl = inp2
+                xx2, a, nc = body(xx2, pl, cl)
+                return (xx2, aux2 + a), nc
+
+            (xx, aux), ncache = jax.lax.scan(inner, (xx, aux), (pg, cg))
+            shared_fn = _maybe_remat(
+                lambda h, c: _shared_block_fwd(shared, cfg, h, emb, positions,
+                                               c, pos), cfg)
+            xx, nsc = shared_fn(xx, sc)
+            return (xx, aux), (ncache, nsc)
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if cache is None:
+            def group_body_nc(carry, pg):
+                xx, aux = carry
+
+                def inner(c2, pl):
+                    xx2, aux2 = c2
+                    xx2, a, _ = body(xx2, pl, None)
+                    return (xx2, aux2 + a), None
+
+                (xx, aux), _ = jax.lax.scan(inner, (xx, aux), pg)
+                shared_fn = _maybe_remat(
+                    lambda h: _shared_block_fwd(shared, cfg, h, emb, positions,
+                                                None, pos)[0], cfg)
+                xx = shared_fn(xx)
+                return (xx, aux), None
+
+            (x, aux), _ = jax.lax.scan(group_body_nc, (x, aux0), p_g)
+            return x, aux, None, None
+        (x, aux), (new_c, new_sc) = jax.lax.scan(
+            group_body, (x, aux0), (p_g, c_g, shared_cache))
+        new_c = jax.tree_util.tree_map(
+            lambda a: a.reshape((groups * per,) + a.shape[2:]), new_c)
+        return x, aux, new_c, new_sc
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is None:
+        def scan_body(carry, pl):
+            xx, aux = carry
+            xx, a, _ = body(xx, pl, None)
+            return (xx, aux + a), None
+        (x, aux), _ = jax.lax.scan(scan_body, (x, aux0), p_stack)
+        return x, aux, None, None
+
+    def scan_body_c(carry, inp):
+        xx, aux = carry
+        pl, cl = inp
+        xx, a, nc = body(xx, pl, cl)
+        return (xx, aux + a), nc
+
+    (x, aux), new_cache = jax.lax.scan(scan_body_c, (x, aux0), (p_stack, cache))
+    return x, aux, new_cache, None
+
+
+def _embed_tokens(params, cfg: LMConfig, tokens, prefix_embeds=None):
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    return _constrain_batch(x)
+
+
+def _head(params, cfg: LMConfig, x):
+    table = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["head"])
+    return jnp.einsum("bsd,dv->bsv", x, table)
+
+
+def forward(params, cfg: LMConfig, tokens, prefix_embeds=None,
+            return_hidden: bool = False):
+    """Full-sequence logits (train/eval). tokens [B,S] int32."""
+    x = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    positions = jnp.arange(x.shape[1])
+    aux_total = jnp.zeros((), jnp.float32)
+    emb0 = x
+    for i, seg in enumerate(cfg.segments):
+        x, aux, _, _ = _run_segment(params[f"seg{i}"], seg, cfg, x, positions,
+                                    shared=params.get("shared"), emb=emb0)
+        aux_total = aux_total + aux
+    x = L.rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    return _head(params, cfg, x), aux_total
+
+
+def prefill(params, cfg: LMConfig, tokens, cache, prefix_embeds=None):
+    """Fill caches over the prompt; return last-position logits + new cache."""
+    x = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    positions = jnp.arange(x.shape[1])
+    emb0 = x
+    new_cache = {}
+    for i, seg in enumerate(cfg.segments):
+        x, _, nc, nsc = _run_segment(
+            params[f"seg{i}"], seg, cfg, x, positions,
+            cache=cache[f"seg{i}"], pos=None,
+            shared=params.get("shared"), emb=emb0,
+            shared_cache=cache.get("shared"))
+        new_cache[f"seg{i}"] = nc
+        if nsc is not None:
+            new_cache["shared"] = nsc
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens, pos):
+    """One decode step. tokens [B,1]; pos: scalar int32 (current index)."""
+    x = _embed_tokens(params, cfg, tokens)
+    positions = pos + jnp.zeros((1,), jnp.int32)
+    emb0 = x
+    new_cache = {}
+    for i, seg in enumerate(cfg.segments):
+        x, _, nc, nsc = _run_segment(
+            params[f"seg{i}"], seg, cfg, x, positions,
+            cache=cache[f"seg{i}"], pos=pos,
+            shared=params.get("shared"), emb=emb0,
+            shared_cache=cache.get("shared"))
+        new_cache[f"seg{i}"] = nc
+        if nsc is not None:
+            new_cache["shared"] = nsc
+    x = L.rmsnorm(params["final_norm"], x)
+    return _head(params, cfg, x), new_cache
+
+
+# ------------------------------------------------------------------- loss ----
+
+def _token_ce(logits, labels):
+    """Mean CE over tokens (fp32). logits [B,S,V], labels [B,S] (-1 = pad)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = labels >= 0
+    ce = jnp.where(valid, lse - ll, 0.0)
+    return ce.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, prefix_embeds=None):
+    """CE (+ MoE aux, + MTP aux). Uses chunked CE when cfg.logit_chunk > 0."""
+    hidden, aux = forward(params, cfg, tokens, prefix_embeds,
+                          return_hidden=True)
+    if cfg.prefix_len:
+        hidden = hidden[:, cfg.prefix_len:]
+    if cfg.logit_chunk and hidden.shape[1] % cfg.logit_chunk == 0:
+        nch = hidden.shape[1] // cfg.logit_chunk
+        h_ch = hidden.reshape(hidden.shape[0], nch, cfg.logit_chunk, -1)
+        l_ch = labels.reshape(labels.shape[0], nch, cfg.logit_chunk)
+
+        def chunk_ce(carry, inp):
+            h, l = inp
+            logits = _head(params, cfg, h)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None],
+                                     axis=-1)[..., 0]
+            valid = l >= 0
+            s = jnp.where(valid, lse - ll, 0.0).sum()
+            n = valid.sum()
+            return (carry[0] + s, carry[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(chunk_ce), (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+            (h_ch.transpose(1, 0, 2, 3), l_ch.transpose(1, 0, 2)))
+        ce = tot / jnp.maximum(cnt, 1)
+    else:
+        ce = _token_ce(_head(params, cfg, hidden), labels)
+
+    mtp_loss = jnp.zeros(())
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(params, cfg, hidden, tokens, labels)
+    loss = ce + aux + cfg.mtp_weight * mtp_loss
+    return loss, {"ce": ce, "aux": aux, "mtp": mtp_loss}
+
+
+def _mtp_loss(params, cfg: LMConfig, hidden, tokens, labels):
+    """DeepSeek-V3 MTP (depth 1): predict token t+2 from (h_t, emb(t+1))."""
+    p = params["mtp"]
+    emb_next = L.embed(params["embed"], jnp.maximum(labels, 0)).astype(cfg.dtype)
+    cat = jnp.concatenate([L.rmsnorm(p["norm_h"], hidden),
+                           L.rmsnorm(p["norm_e"], emb_next)], axis=-1)
+    h = jnp.einsum("bse,ed->bsd", cat, p["proj"])
+    seg = Segment("mla" if cfg.mla else "attn", "dense", 1)
+    positions = jnp.arange(h.shape[1])
+    h, _, _ = _layer_fwd(p["layer"], seg, cfg, h, positions, None, None)
+    logits = _head(params, cfg, h[:, :-1])
+    labels2 = labels[:, 1:]                      # token t+2 at position t
+    return _token_ce(logits, labels2)

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) blocks — chunked parallel training form + O(1)-state decode.
+
+Chunked SSD (Mamba2 paper, §6): within a chunk the scalar-decay linear recurrence is
+computed as a masked quadratic form (MXU-friendly), across chunks a cheap scan carries
+the [P,N] state. Exactness vs the step-by-step recurrence is covered by
+``tests/test_ssm.py``.
+
+Layout: x [B,S,H,P] (heads × headdim = d_inner), B/C [B,S,G,N] shared per group.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm_specs
+from .specs import param
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64          # N
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64         # P
+    n_groups: int = 1
+    chunk: int = 128
+
+
+def d_inner(d_model: int, cfg: SSMConfig) -> int:
+    return d_model * cfg.expand
+
+
+def n_heads_ssm(d_model: int, cfg: SSMConfig) -> int:
+    return d_inner(d_model, cfg) // cfg.head_dim
+
+
+def mamba_specs(d: int, cfg: SSMConfig, dtype=jnp.bfloat16):
+    di = d_inner(d, cfg)
+    h = n_heads_ssm(d, cfg)
+    gn = cfg.n_groups * cfg.d_state
+    conv_ch = di + 2 * gn
+    return {
+        "w_in": param((d, 2 * di + 2 * gn + h), ("embed", "mlp"), dtype=dtype),
+        "conv_w": param((cfg.d_conv, conv_ch), ("conv_k", "mlp"), dtype=dtype,
+                        scale=0.5),
+        "conv_b": param((conv_ch,), ("mlp",), init="zeros", dtype=dtype),
+        "dt_bias": param((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "a_log": param((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "d_skip": param((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "norm": rmsnorm_specs(di),
+        "w_out": param((di, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _segsum_mask(a_cum):
+    """a_cum [..., L] -> decay matrix exp(a_cum_i - a_cum_j) masked j<=i."""
+    l = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x  [B,S,H,P]   inputs (per head)
+    dt [B,S,H]     discretization steps (post-softplus, >0)
+    a  [H]         negative decay rates (A = -exp(a_log))
+    b  [B,S,G,N]   input maps;  c [B,S,G,N] output maps; G divides H
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    from ..sharding.rules import dim_constraint
+    xc = dim_constraint(x.reshape(bsz, nc, l, h, p), 3)   # heads -> model
+    dtc = dim_constraint(dt.reshape(bsz, nc, l, h), 3)
+    bc = b.reshape(bsz, nc, l, g, n)
+    cc = c.reshape(bsz, nc, l, g, n)
+    bh = dim_constraint(jnp.repeat(bc, rep, axis=3), 3)   # [B,nc,L,H,N]
+    ch = dim_constraint(jnp.repeat(cc, rep, axis=3), 3)
+
+    adt = dtc * a[None, None, None, :]          # log-decays [B,nc,L,H]
+    a_cum = jnp.cumsum(adt, axis=2)
+
+    # intra-chunk quadratic part
+    lmat = _segsum_mask(a_cum.transpose(0, 1, 3, 2))      # [B,nc,H,L,L]
+    scores = jnp.einsum("bclhn,bcjhn->bchlj", ch, bh)     # C_i · B_j
+    scores = scores * lmat
+    xdt = xc * dtc[..., None]                             # dt_j x_j
+    y_intra = jnp.einsum("bchlj,bcjhp->bclhp", scores, xdt)
+
+    # chunk-final states: S_c = sum_j exp(a_end - a_j) dt_j B_j x_j^T  [B,nc,H,P,N]
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)   # [B,nc,L,H]
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_to_end * dtc, bh, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])             # [B,nc,H]
+
+    def scan_body(h_prev, inp):
+        st, dec = inp                                     # [B,H,P,N], [B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                              # emit state BEFORE chunk
+
+    h_init = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0
+    h_last, h_before = jax.lax.scan(
+        scan_body, h_init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)          # [B,nc,H,P,N]
+
+    # contribution of carried state:  y_inter_i = exp(a_cum_i) C_i · H_prev
+    in_decay = jnp.exp(a_cum)                             # [B,nc,L,H]
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp", in_decay, ch,
+                         h_before.astype(ch.dtype))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def ssd_step(h, x, dt, a, b, c):
+    """Single decode step. h [B,H,P,N]; x [B,H,P]; dt [B,H]; b/c [B,G,N]."""
+    g = b.shape[1]
+    rep = h.shape[1] // g
+    bh = jnp.repeat(b, rep, axis=1)                       # [B,H,N]
+    ch = jnp.repeat(c, rep, axis=1)
+    decay = jnp.exp(dt * a[None, :])                      # [B,H]
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, bh, x).astype(h.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch)
+    return h_new.astype(jnp.float32), y
+
+
+def _causal_conv(x, w, b, conv_state=None, return_state=False):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. If conv_state [B,K-1,C] is
+    given (decode, S==1) uses & updates it; ``return_state`` also emits the
+    trailing window during prefill."""
+    k = w.shape[0]
+    if conv_state is not None and x.shape[1] == 1:
+        window = jnp.concatenate([conv_state, x], axis=1)     # [B,K,C]
+        y = jnp.einsum("bkc,kc->bc", window, w)[:, None] + b
+        return y, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = pad[:, pad.shape[1] - (k - 1):] if return_state else None
+    return y, new_state
+
+
+def mamba_block(p, x, cfg, ssm_cfg: SSMConfig, cache=None):
+    """Mamba2 sublayer. x [B,S,d]. cache (decode): {"h": [B,H,P,N],
+    "conv": [B,K-1,C]}. Returns (out [B,S,d], new_cache)."""
+    bsz, s, d = x.shape
+    di = d_inner(d, ssm_cfg)
+    h = n_heads_ssm(d, ssm_cfg)
+    g, n = ssm_cfg.n_groups, ssm_cfg.d_state
+    gn = g * n
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt_raw = zxbcdt[..., di + di + 2 * gn:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    a = -jnp.exp(p["a_log"])
+
+    decode = cache is not None and s == 1
+    conv_state = cache["conv"] if decode else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state,
+                                 return_state=cache is not None)
+    xbc = jax.nn.silu(xbc)
+    x_ssm = xbc[..., :di].reshape(bsz, s, h, ssm_cfg.head_dim)
+    b_ssm = xbc[..., di:di + gn].reshape(bsz, s, g, n)
+    c_ssm = xbc[..., di + gn:].reshape(bsz, s, g, n)
+
+    if decode:
+        h_new, y = ssd_step(cache["h"], x_ssm[:, 0], dt[:, 0], a,
+                            b_ssm[:, 0], c_ssm[:, 0])
+        y = y[:, None]
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        y, h_last = ssd_chunked(x_ssm, dt, a, b_ssm, c_ssm, ssm_cfg.chunk)
+        new_cache = None
+        if cache is not None:      # prefill fill
+            new_cache = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    y = y + x_ssm * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+
+    # gated RMSNorm then out-projection
+    gated = y * jax.nn.silu(z)
+    x32 = gated.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    gated = (x32 * jax.lax.rsqrt(var + 1e-5) *
+             p["norm"]["scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", gated, p["w_out"])
+    return out, new_cache

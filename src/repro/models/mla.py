@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, MiniCPM3).
+
+Train/prefill: K/V are materialized per head from the compressed latent (standard
+formulation), attention runs through the blockwise online-softmax path.
+
+Decode: the **absorbed** formulation — the cache stores only the kv latent
+``c_kv [B,S,r]`` and the shared rope key ``k_rope [B,S,dr]``; per-head scores are
+``(q_nope W_uk) · c + q_rope · k_rope`` and values are reconstructed as
+``(p · c) W_uv``. Cache bytes shrink from 2·H·dh to (r + dr) per token —
+for DeepSeek-V3: (512+64)/(2·128·128) ≈ 1.8% of a dense GQA cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import NEG_INF, apply_rope, blockwise_attention, rmsnorm, rmsnorm_specs
+from .specs import param
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+def mla_specs(d: int, n_heads: int, m: MLAConfig, dtype=jnp.bfloat16):
+    dq, r = m.q_lora_rank, m.kv_lora_rank
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    return {
+        "w_dq": param((d, dq), ("embed", "q_lora"), dtype=dtype),
+        "q_norm": rmsnorm_specs(dq),
+        "w_uq": param((dq, n_heads, dn + dr), ("q_lora", "heads", "head_dim"),
+                      dtype=dtype),
+        "w_dkv": param((d, r), ("embed", "kv_lora"), dtype=dtype),
+        "kv_norm": rmsnorm_specs(r),
+        "w_kr": param((d, dr), ("embed", "head_dim"), dtype=dtype),
+        "w_uk": param((r, n_heads, dn), ("kv_lora", "heads", "head_dim"),
+                      dtype=dtype),
+        "w_uv": param((r, n_heads, dv), ("kv_lora", "heads", "head_dim"),
+                      dtype=dtype),
+        "wo": param((n_heads, dv, d), ("heads", "head_dim", "embed"),
+                    dtype=dtype),
+    }
+
+
+def _project_q(p, x, positions, m: MLAConfig, theta: float):
+    cq = rmsnorm(p["q_norm"], jnp.einsum("bsd,dq->bsq", x, p["w_dq"]))
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def mla_block(p, x, positions, cfg, cache=None, pos=None):
+    """MLA sublayer. cfg needs .mla (MLAConfig), .n_heads, .rope_theta,
+    .q_chunk/.k_chunk. Returns (out, new_cache).
+
+    cache (decode/prefill fill): {"ckv": [B,Smax,r], "kr": [B,Smax,dr]}.
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, positions, m, cfg.rope_theta)
+    ckv = rmsnorm(p["kv_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]))
+    kr = apply_rope(jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, :, None, :],
+                    positions, cfg.rope_theta)[:, :, 0, :]      # [B,S,dr]
+
+    if cache is not None and s == 1:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, pos, axis=1)
+        out = _absorbed_decode(p, q_nope, q_rope, ckv_c, kr_c, pos, m)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    else:
+        # materialized path
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+        k_rope = jnp.broadcast_to(kr[:, :, None, :],
+                                  (b, s, cfg.n_heads, m.qk_rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope], axis=-1)
+        # pad v head dim up to qk dim so one attention call serves both
+        dqk = m.qk_nope_dim + m.qk_rope_dim
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - m.v_head_dim)))
+        q_chunk = cfg.q_chunk
+        if getattr(cfg, "seq_shard_attn", False):
+            from ..sharding.rules import kv_replicated_constraint
+            k = kv_replicated_constraint(k)
+            v_pad = kv_replicated_constraint(v_pad)
+            q_chunk = s
+        out = blockwise_attention(q, k, v_pad, q_chunk=q_chunk,
+                                  k_chunk=cfg.k_chunk)[..., : m.v_head_dim]
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0,
+                                                           axis=1),
+                "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, 0,
+                                                          axis=1),
+            }
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def _absorbed_decode(p, q_nope, q_rope, ckv, kr, pos, m: MLAConfig):
+    """Latent-cache decode. q_nope [B,1,H,dn], q_rope [B,1,H,dr],
+    ckv [B,Smax,r], kr [B,Smax,dr] -> out [B,1,H,dv]."""
+    scale = 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+    # absorb W_uk into q:  q_eff [B,H,r]
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])[:, 0]
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                       ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    kpos = jnp.arange(ckv.shape[1])
+    s = jnp.where(kpos[None, None, :] <= pos, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)                          # [B,H,S]
+    lat = jnp.einsum("bhs,bsr->bhr", pattn, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhk->bhk", lat, p["w_uv"].astype(jnp.float32))
+    return out[:, None].astype(q_nope.dtype)                     # [B,1,H,dv]

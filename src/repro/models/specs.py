@@ -1,0 +1,106 @@
+"""Spec-first parameter system.
+
+Model code builds a pytree of :class:`ParamSpec` (cheap — no jax arrays involved).
+From that single source of truth we derive:
+
+* ``shape_structs(specs)``   — ``jax.ShapeDtypeStruct`` pytree for compile-only dry-runs
+  (a 671B model never gets materialized on the CPU host),
+* ``materialize(key, specs)``— actual parameters for smoke tests / real training,
+* ``logical_axes(specs)``    — pytree of logical-axis tuples consumed by
+  ``repro.sharding.rules`` to build ``NamedSharding``s.
+
+Every spec carries *logical* axis names ("embed", "mlp", "heads", "vocab", "layers",
+"expert", ...). Mapping logical->mesh axes lives in one rules table, so re-sharding an
+architecture is a config change, not a code change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()          # logical axis names; len(axes) == len(shape)
+    init: str = "normal"      # normal | zeros | ones | uniform_scaled
+    scale: float | None = None  # stddev override; default fan-in scaled
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}")
+
+
+def param(shape, axes, dtype=jnp.float32, init="normal", scale=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, tuple(axes), init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(fn, specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def shape_structs(specs):
+    """ShapeDtypeStruct pytree — used by dry-run lowering (no allocation)."""
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_axes(specs):
+    return _tree_map(lambda s: s.axes, specs)
+
+
+def n_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves))
+
+
+def _init_one(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "normal":
+        # fan-in scaled normal; for stacked layer params the fan-in is the true
+        # per-layer fan-in (leading "layers" axis excluded from fan computation).
+        shape = s.shape
+        fan_axes = [d for d, ax in zip(shape, s.axes) if ax != "layers"]
+        fan_in = fan_axes[0] if len(fan_axes) >= 2 else (fan_axes[0] if fan_axes else 1)
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+    if s.init == "uniform_scaled":
+        lim = s.scale if s.scale is not None else 0.05
+        return jax.random.uniform(key, s.shape, jnp.float32, -lim, lim).astype(s.dtype)
+    raise ValueError(f"unknown init {s.init}")
+
+
+def materialize(key, specs):
+    """Instantiate real parameters. Deterministic per-leaf via path folding."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def cast_pytree(tree, dtype):
+    def _c(x):
+        if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_c, tree)

@@ -1,0 +1,291 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent mixing).
+
+Both cells run as exact stabilized recurrences (the xLSTM formulation) under
+``lax.scan``; training memory is bounded by chunked rematerialization (outer scan over
+chunks, inner remat'd scan over steps — only chunk-boundary states are saved for BPTT,
+the sqrt-memory trick). Decode carries (C, n, m) / (c, n, m) states — O(1) in sequence
+length, which is why xlstm-125m runs the long_500k shape.
+
+Simplifications vs the reference implementation (documented in DESIGN.md §Arch):
+no causal conv1d front-end inside the mLSTM branch, sigmoid forget gates,
+per-head RMSNorm instead of GroupNorm.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm_specs
+from .specs import param
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    up_factor: float = 2.0       # mLSTM projection expansion
+    slstm_ff: float = 4.0 / 3.0  # sLSTM post-FFN expansion
+    chunk: int = 64              # remat chunk length
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def mlstm_specs(d: int, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    di = int(d * cfg.up_factor)
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "w_up": param((d, 2 * di), ("embed", "mlp"), dtype=dtype),
+        "w_q": param((di, h, dh), ("mlp", "heads", "head_dim"), dtype=dtype),
+        "w_k": param((di, h, dh), ("mlp", "heads", "head_dim"), dtype=dtype),
+        "w_v": param((di, h, dh), ("mlp", "heads", "head_dim"), dtype=dtype),
+        "w_if": param((di, h, 2), ("mlp", "heads", "head_dim"), dtype=jnp.float32,
+                      scale=0.01),
+        "b_if": param((h, 2), ("heads", "head_dim"), init="zeros",
+                      dtype=jnp.float32),
+        "head_norm": rmsnorm_specs(dh),
+        "w_down": param((di, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _mlstm_cell_step(state, inp):
+    """state: (C [B,H,dv,dk], n [B,H,dk], m [B,H]); inp: q,k,v [B,H,dh], i/f [B,H]."""
+    c, n, m = state
+    q, k, v, ig, fg = inp
+    log_f = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p[..., None, None] * c + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    h_out = num / den[..., None]
+    return (c_new, n_new, m_new), h_out
+
+
+def mlstm_scan_recurrent(q, k, v, ig, fg, state=None, chunk: int = 64):
+    """Step-by-step reference (exact): chunked-remat ``lax.scan`` over time.
+
+    O(S) sequential steps and O(S·dh²) state HBM traffic — kept as the oracle
+    for the parallel form below and for perf comparison (EXPERIMENTS.md §Perf:
+    this was the xlstm-125m baseline; 26.7 s/step memory term on v5e)."""
+    b, s, h, dh = q.shape
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+    l = min(chunk, s)
+    if s % l:
+        l = s
+    nc = s // l
+
+    def to_chunks(x):
+        return x.reshape(b, nc, l, *x.shape[2:]).transpose(1, 2, 0,
+                                                           *range(3, x.ndim + 1))
+
+    xs = tuple(to_chunks(t) for t in (q, k, v, ig, fg))   # [nc, L, B, ...]
+
+    @jax.checkpoint
+    def chunk_body(st, ch):
+        st, hs = jax.lax.scan(_mlstm_cell_step, st, ch)
+        return st, hs
+
+    state, hs = jax.lax.scan(chunk_body, state, xs)       # hs [nc, L, B, H, dh]
+    hs = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, h, dh)
+    return hs, state
+
+
+def mlstm_scan(q, k, v, ig, fg, state=None, chunk: int = 64):
+    """Chunkwise-PARALLEL stabilized mLSTM (the xlstm-125m §Perf hillclimb).
+
+    Within a chunk the recurrence unrolls to a masked quadratic form
+    (MXU-friendly, like attention/SSD); across chunks a cheap scan carries the
+    stabilized (C, n, m) state — matrix-state HBM traffic drops from O(S·dh²)
+    to O(S/L·dh²). Exactness vs ``mlstm_scan_recurrent`` is covered by
+    tests/test_ssm.py.
+
+    q/k/v [B,S,H,dh] fp32 (k pre-scaled 1/sqrt(dh)), gates ig/fg [B,S,H].
+    Returns (h [B,S,H,dh], final (C, n, m)).
+    """
+    b, s, h, dh = q.shape
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+    l = min(chunk, s)
+    if s % l:
+        l = s
+    nc = s // l
+
+    qc = q.reshape(b, nc, l, h, dh).transpose(1, 0, 3, 2, 4)  # [nc,B,H,L,dh]
+    kc = k.reshape(b, nc, l, h, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, l, h, dh).transpose(1, 0, 3, 2, 4)
+    igc = ig.reshape(b, nc, l, h).transpose(1, 0, 3, 2)       # [nc,B,H,L]
+    fgc = fg.reshape(b, nc, l, h).transpose(1, 0, 3, 2)
+
+    neg = -1e30
+    causal = jnp.tril(jnp.ones((l, l), bool))
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        c_prev, n_prev, m_prev = carry            # [B,H,dh,dh],[B,H,dh],[B,H]
+        qb, kb, vb, ib, fb = inp                  # [B,H,L,*]
+        lf = jax.nn.log_sigmoid(fb)               # [B,H,L]
+        bcum = jnp.cumsum(lf, axis=-1)            # b_t
+        # D_tj = b_t - b_j + i_j  (j <= t)
+        d_mat = bcum[..., :, None] - bcum[..., None, :] + ib[..., None, :]
+        d_mat = jnp.where(causal, d_mat, neg)
+        m_intra = d_mat.max(axis=-1)              # [B,H,L]
+        m_row = jnp.maximum(bcum + m_prev[..., None], m_intra)
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qb, kb)
+        w_mat = jnp.exp(d_mat - m_row[..., None])
+        inter_scale = jnp.exp(bcum + m_prev[..., None] - m_row)   # [B,H,L]
+        num = jnp.einsum("bhtj,bhtj,bhjd->bhtd", w_mat, scores, vb) \
+            + inter_scale[..., None] * jnp.einsum("bhtd,bhvd->bhtv", qb,
+                                                  c_prev)
+        den_dot = jnp.einsum("bhtj,bhtj->bht", w_mat, scores) \
+            + inter_scale * jnp.einsum("bhtd,bhd->bht", qb, n_prev)
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_row))
+        h_out = num / den[..., None]              # [B,H,L,dh]
+
+        # ---- carry update (end of chunk) ----
+        b_end = bcum[..., -1]                     # [B,H]
+        m_new = jnp.maximum(b_end + m_prev,
+                            (b_end[..., None] - bcum + ib).max(axis=-1))
+        decay_j = jnp.exp(b_end[..., None] - bcum + ib - m_new[..., None])
+        c_new = jnp.exp(b_end + m_prev - m_new)[..., None, None] * c_prev \
+            + jnp.einsum("bhj,bhjv,bhjk->bhvk", decay_j, vb, kb)
+        n_new = jnp.exp(b_end + m_prev - m_new)[..., None] * n_prev \
+            + jnp.einsum("bhj,bhjk->bhk", decay_j, kb)
+        return (c_new, n_new, m_new), h_out
+
+    state, hs = jax.lax.scan(chunk_body, state, (qc, kc, vc, igc, fgc))
+    # hs [nc, B, H, L, dh] -> [B, S, H, dh]
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+    return hs, state
+
+
+def mlstm_block(p, x, cfg: XLSTMConfig, cache=None):
+    """x [B,S,d]. cache (decode): {"c","n","m"}. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    di = int(d * cfg.up_factor)
+    h = cfg.n_heads
+    dh = di // h
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    u, z = up[..., :di], up[..., di:]
+    q = jnp.einsum("bse,ehk->bshk", u, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", u, p["w_k"]).astype(jnp.float32) / (dh ** 0.5)
+    v = jnp.einsum("bse,ehk->bshk", u, p["w_v"]).astype(jnp.float32)
+    gates = jnp.einsum("bse,ehg->bshg", u.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    ig, fg = gates[..., 0], gates[..., 1]
+
+    if cache is not None and s == 1:
+        state = (cache["c"], cache["n"], cache["m"])
+        state, h_out = _mlstm_cell_step(
+            state, (q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]))
+        h_seq = h_out[:, None]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2]}
+    else:
+        state0 = None
+        if cache is not None:
+            state0 = (cache["c"], cache["n"], cache["m"])
+        h_seq, state = mlstm_scan(q, k, v, ig, fg, state0, cfg.chunk)
+        new_cache = ({"c": state[0], "n": state[1], "m": state[2]}
+                     if cache is not None else None)
+
+    # per-head norm, gate, down-project
+    hn = h_seq.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hn), axis=-1, keepdims=True)
+    hn = hn * jax.lax.rsqrt(var + 1e-5) * p["head_norm"]["scale"]
+    hn = hn.reshape(b, s, di).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", hn * jax.nn.silu(z), p["w_down"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def slstm_specs(d: int, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    h = cfg.n_heads
+    dh = d // h
+    f = int(d * cfg.slstm_ff)
+    return {
+        "w_gates": param((d, h, 4 * dh), ("embed", "heads", "head_dim"),
+                         dtype=dtype),
+        "r_gates": param((h, dh, 4 * dh), ("heads", "head_dim", "mlp"),
+                         dtype=dtype, scale=0.02),
+        "b_gates": param((h, 4 * dh), ("heads", "head_dim"), init="zeros",
+                         dtype=jnp.float32),
+        "head_norm": rmsnorm_specs(dh),
+        "w_ff_gate": param((d, f), ("embed", "mlp"), dtype=dtype),
+        "w_ff_up": param((d, f), ("embed", "mlp"), dtype=dtype),
+        "w_ff_down": param((f, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_cell_step(params_r, state, wx):
+    """state: (h, c, n, m) each [B,H,dh]; wx [B,H,4dh] input pre-activations."""
+    r, b_g = params_r
+    h_prev, c, n, m = state
+    pre = wx + jnp.einsum("bhd,hdg->bhg", h_prev, r) + b_g
+    dh = h_prev.shape[-1]
+    zt, it, ft, ot = (pre[..., :dh], pre[..., dh:2 * dh],
+                      pre[..., 2 * dh:3 * dh], pre[..., 3 * dh:])
+    z = jnp.tanh(zt)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_block(p, x, cfg: XLSTMConfig, cache=None):
+    """x [B,S,d]. cache: {"h","c","n","m"} each [B,H,dh]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    wx = jnp.einsum("bsd,dhg->bshg", x, p["w_gates"]).astype(jnp.float32)
+    r = p["r_gates"].astype(jnp.float32)
+    bg = p["b_gates"]
+
+    if cache is not None and s == 1:
+        state = (cache["h"], cache["c"], cache["n"], cache["m"])
+        state, h_out = _slstm_cell_step((r, bg), state, wx[:, 0])
+        h_seq = h_out[:, None]
+        new_cache = dict(zip(("h", "c", "n", "m"), state))
+    else:
+        state = tuple(jnp.zeros((b, h, dh), jnp.float32) for _ in range(3)) + (
+            jnp.full((b, h, dh), -1e30, jnp.float32),)
+        if cache is not None:
+            state = (cache["h"], cache["c"], cache["n"], cache["m"])
+        l = min(cfg.chunk, s)
+        if s % l:
+            l = s
+        nc = s // l
+        xs = wx.reshape(b, nc, l, h, 4 * dh).transpose(1, 2, 0, 3, 4)
+
+        @jax.checkpoint
+        def chunk_body(st, ch):
+            return jax.lax.scan(
+                lambda s_, x_: _slstm_cell_step((r, bg), s_, x_), st, ch)
+
+        state, hs = jax.lax.scan(chunk_body, state, xs)
+        h_seq = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, h, dh)
+        new_cache = (dict(zip(("h", "c", "n", "m"), state))
+                     if cache is not None else None)
+
+    hn = h_seq.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hn), axis=-1, keepdims=True)
+    hn = (hn * jax.lax.rsqrt(var + 1e-5) * p["head_norm"]["scale"]).reshape(
+        b, s, d).astype(x.dtype)
+    # gated FFN (proj factor 4/3)
+    g = jnp.einsum("bsd,df->bsf", hn, p["w_ff_gate"])
+    u = jnp.einsum("bsd,df->bsf", hn, p["w_ff_up"])
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["w_ff_down"])
+    return out, new_cache

@@ -1,0 +1,178 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style, one table per mesh kind).
+
+Every ParamSpec / cache spec carries logical axis names; this module maps them onto
+the physical mesh with two safety passes:
+
+* divisibility — a dim whose size is not divisible by the mapped mesh-axis product
+  falls back to replication (e.g. qwen3's 4 KV heads on model=16),
+* no-reuse — a mesh axis consumed by an earlier dim of the same tensor is dropped
+  from later dims (left-to-right greedy), keeping PartitionSpecs valid.
+
+``activation_constraint`` is the in-model annotation hook: inside ``set_context`` it
+pins activations' leading (batch) dim to the data axes, which keeps GSPMD from
+drifting into all-replicated layouts in long scans.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.specs import ParamSpec, is_spec
+
+BATCH_AXES = ("pod", "data")
+
+# logical axis -> preferred mesh axes (tuple tried in order, greedy)
+BASE_RULES = {
+    "batch": (("pod", "data"),),
+    "cache_batch": (("pod", "data"),),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "cache_seq": ("model",),
+    # everything else replicated:
+    "embed": (), "head_dim": (), "head_dim2": (), "layers": (),
+    "kv_lora": (), "q_lora": (), "conv_k": (), "ssm_state": (),
+    "seq": (),
+}
+
+FSDP_RULES = dict(BASE_RULES)
+FSDP_RULES["embed"] = (("pod", "data"),)      # ZeRO-3-style param sharding
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _present(mesh: Mesh, axes):
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = tuple(a for a in axes if a in mesh.shape)
+    return kept
+
+
+def spec_partition(mesh: Mesh, spec: ParamSpec, rules: dict) -> P:
+    used: set = set()
+    parts = []
+    for dim, ax in zip(spec.shape, spec.axes):
+        choices = rules.get(ax, ())
+        placed = None
+        for cand in choices:
+            cand = _present(mesh, cand)
+            if not cand:
+                continue
+            cand = tuple(a for a in cand if a not in used)
+            if not cand:
+                continue
+            if dim % _axes_size(mesh, cand) != 0:
+                # try dropping trailing axes of the candidate
+                while cand and dim % _axes_size(mesh, cand) != 0:
+                    cand = cand[:-1]
+                if not cand:
+                    continue
+            placed = cand
+            break
+        if placed:
+            used.update(placed)
+            parts.append(placed if len(placed) > 1 else placed[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, specs, rules: dict):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, spec_partition(mesh, s, rules)),
+        specs, is_leaf=is_spec)
+
+
+def batch_partition(mesh: Mesh, ndim: int, seq_axis: int | None = None,
+                    seq_mesh_axis: str = "model", batch_size: int | None = None,
+                    axes=BATCH_AXES) -> P:
+    """[B, ...] activations/inputs: batch over (pod, data), rest replicated;
+    optionally shard one more dim (sequence) over ``seq_mesh_axis``. A batch
+    size not divisible by the axes product falls back to fewer axes (batch=1
+    long-context decode replicates)."""
+    b = _present(mesh, axes)
+    if batch_size is not None:
+        while b and batch_size % _axes_size(mesh, b) != 0:
+            b = b[:-1]
+    parts: list = [b if len(b) > 1 else (b[0] if b else None)]
+    parts += [None] * (ndim - 1)
+    if seq_axis is not None and seq_mesh_axis in mesh.shape:
+        parts[seq_axis] = seq_mesh_axis
+    return P(*parts)
+
+
+def dim_constraint(x, axis: int, mesh_axis: str = "model"):
+    """Shard one activation dim over a mesh axis (no-op outside set_context or
+    when not divisible). Used for MoE expert buffers and SSM head tensors."""
+    mesh = getattr(_ctx, "mesh", None)
+    if (mesh is None or mesh_axis not in mesh.shape
+            or x.shape[axis] % mesh.shape[mesh_axis] != 0):
+        return x
+    parts = [None] * x.ndim
+    parts[axis] = mesh_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+# --------------------------------------------------------------- context ----
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def set_context(mesh: Mesh, enabled: bool = True, seq_shard: bool = False,
+                extra_dp: bool = False):
+    prev = (getattr(_ctx, "mesh", None), getattr(_ctx, "seq_shard", False),
+            getattr(_ctx, "extra_dp", False))
+    _ctx.mesh = mesh if enabled else None
+    _ctx.seq_shard = seq_shard
+    _ctx.extra_dp = extra_dp
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.seq_shard, _ctx.extra_dp = prev
+
+
+def activation_constraint(x):
+    """batch -> (pod, data); optionally seq (dim 1) -> model.
+
+    Sequence parallelism (`seq_shard`) keeps every activation sharded over the
+    model axis on the sequence dim — the layout for archs whose head counts
+    don't divide the model axis (phi3 40H, minicpm3 40H, llava 56H): per-token
+    ops stay 16-way parallel, and attention all-gathers only K/V (much smaller
+    than d_model for GQA/MLA).
+    """
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return x
+    seq_axis = None
+    if (getattr(_ctx, "seq_shard", False) and x.ndim >= 3
+            and "model" in mesh.shape and x.shape[1] % mesh.shape["model"] == 0):
+        seq_axis = 1
+    axes = (("pod", "data", "model") if getattr(_ctx, "extra_dp", False)
+            else BATCH_AXES)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, batch_partition(mesh, x.ndim, seq_axis,
+                                               batch_size=x.shape[0],
+                                               axes=axes)))
+
+
+def kv_replicated_constraint(x):
+    """Pin K/V to batch-only sharding (seq replicated) — the one all-gather of
+    sequence-parallel attention."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None or not getattr(_ctx, "seq_shard", False):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, batch_partition(mesh, x.ndim,
+                                               batch_size=x.shape[0])))

@@ -1,0 +1,59 @@
+"""Spiking layer primitives: conv / BN / pool / linear over NHWC activations.
+
+Convolutions take binary spike inputs {0,1} (except the stem, which sees the analog
+input as direct current injection). ``spike_conv`` can route through the Pallas
+event-driven kernel (``repro.kernels.spike_matmul``) when ``use_kernel`` is set;
+default is the XLA path, which is also the oracle the kernel is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.specs import param
+
+
+# ---- specs ---------------------------------------------------------------
+
+def conv_specs(cin: int, cout: int, k: int):
+    return {"w": param((k, k, cin, cout), ("kh", "kw", "cin", "cout"))}
+
+
+def bn_specs(c: int):
+    return {"scale": param((c,), ("cout",), init="ones"),
+            "bias": param((c,), ("cout",), init="zeros")}
+
+
+def linear_specs(din: int, dout: int):
+    return {"w": param((din, dout), ("din", "dout")),
+            "b": param((dout,), ("dout",), init="zeros")}
+
+
+# ---- ops -----------------------------------------------------------------
+
+def conv2d(params, x, stride: int = 1):
+    """NHWC conv, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batch_norm(params, x, eps: float = 1e-5, axes=(0, 1, 2)):
+    """Training-mode BN over (B, H, W) — per-timestep stats (tdBN-lite)."""
+    mean = x.mean(axes, keepdims=True)
+    var = x.var(axes, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * params["scale"] + params["bias"]
+
+
+def max_pool(x, k: int = 2, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME")
+
+
+def avg_pool_global(x):
+    return x.mean(axis=(1, 2))
+
+
+def linear(params, x):
+    return x @ params["w"] + params["b"]

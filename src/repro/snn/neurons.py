@@ -1,0 +1,79 @@
+"""LIF neuron dynamics with surrogate-gradient spikes (BPTT-ready).
+
+Forward (paper Fig 3 data flow):  U_t = λ·U_{t-1}·(1 - S_{t-1}) + I_t   (hard reset)
+                             or   U_t = λ·U_{t-1} - θ·S_{t-1} + I_t     (soft reset)
+                                  S_t = H(U_t - θ)
+
+The Heaviside spike is non-differentiable; BPTT uses a surrogate derivative. We ship
+the three standard choices (rectangular window as in STBP, sigmoid, atan) behind
+``spike`` (a ``jax.custom_vjp``). The membrane-update + spike + reset composite is the
+hot elementwise op of SNN training and is also provided as a fused Pallas kernel
+(``repro.kernels.lif``) — this module is its reference semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    threshold: float = 1.0
+    decay: float = 0.5            # membrane leak λ
+    reset: str = "hard"           # hard | soft
+    surrogate: str = "rect"       # rect | sigmoid | atan
+    surrogate_scale: float = 2.0  # window width / steepness α
+
+
+def _surrogate_grad(u_minus_th, kind: str, alpha: float):
+    if kind == "rect":
+        # STBP rectangular window: 1/alpha inside |u-θ| < alpha/2
+        return (jnp.abs(u_minus_th) < (alpha / 2)).astype(u_minus_th.dtype) / alpha
+    if kind == "sigmoid":
+        s = jax.nn.sigmoid(alpha * u_minus_th)
+        return alpha * s * (1 - s)
+    if kind == "atan":
+        return alpha / (2 * (1 + (jnp.pi / 2 * alpha * u_minus_th) ** 2))
+    raise ValueError(f"unknown surrogate {kind}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def spike(u_minus_th, kind: str = "rect", alpha: float = 2.0):
+    return (u_minus_th > 0).astype(u_minus_th.dtype)
+
+
+def _spike_fwd(u_minus_th, kind, alpha):
+    return spike(u_minus_th, kind, alpha), u_minus_th
+
+
+def _spike_bwd(kind, alpha, res, g):
+    return (g * _surrogate_grad(res, kind, alpha),)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(u, s_prev, current, cfg: LIFConfig):
+    """One LIF timestep. Returns (u_new, s_new)."""
+    if cfg.reset == "hard":
+        u = cfg.decay * u * (1.0 - s_prev) + current
+    elif cfg.reset == "soft":
+        u = cfg.decay * u - cfg.threshold * s_prev + current
+    else:
+        raise ValueError(cfg.reset)
+    s = spike(u - cfg.threshold, cfg.surrogate, cfg.surrogate_scale)
+    return u, s
+
+
+def lif_rollout(currents, cfg: LIFConfig):
+    """Unroll LIF over time: currents [T, ...] -> spikes [T, ...] (lax.scan)."""
+    def body(carry, i_t):
+        u, s = carry
+        u, s = lif_step(u, s, i_t, cfg)
+        return (u, s), s
+    zero = jnp.zeros_like(currents[0])
+    (_, _), spikes = jax.lax.scan(body, (zero, zero), currents)
+    return spikes

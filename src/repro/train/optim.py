@@ -1,0 +1,154 @@
+"""Optimizers in pure JAX (no optax dependency).
+
+``adamw`` — standard AdamW with decoupled weight decay and bias correction.
+Moment dtype is configurable: fp32 (default), bf16, or **int8 channel-quantized**
+(``state_dtype="int8"``) — the distributed-optimization trick that shrinks optimizer
+HBM ~4x for the very large archs (deepseek-v3 fp32 moments alone exceed v5e HBM on a
+single pod; see EXPERIMENTS.md §Dry-run). int8 moments keep the *parameter's shape and
+logical axes* (codes int8, per-channel absmax scales over the last axis), so they
+shard exactly like the parameter under the same rules. ``v`` is quantized as sqrt(v)
+for dynamic range (8-bit Adam practice), dequantized by squaring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0          # global-norm clip; 0 disables
+    state_dtype: str = "fp32"       # fp32 | bf16 | int8
+
+
+def _q8(x, sqrt_domain: bool = False):
+    """Per-channel (last axis) absmax int8. Returns (codes, scale)."""
+    if sqrt_domain:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _dq8(codes, scale, sqrt_domain: bool = False):
+    x = codes.astype(jnp.float32) * scale
+    if sqrt_domain:
+        x = jnp.square(x)
+    return x
+
+
+def _zeros_state(p, tag: str, sqrt_domain: bool = False):
+    if tag == "int8":
+        return {"codes": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.ones(p.shape[:-1] + (1,) if p.ndim else (1,),
+                                  jnp.float32)}
+    dt = jnp.bfloat16 if tag == "bf16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def _read_state(s, tag: str, sqrt_domain: bool = False):
+    if tag == "int8":
+        return _dq8(s["codes"], s["scale"], sqrt_domain)
+    return s.astype(jnp.float32)
+
+
+def _write_state(val, tag: str, sqrt_domain: bool = False):
+    if tag == "int8":
+        codes, scale = _q8(val, sqrt_domain)
+        return {"codes": codes, "scale": scale}
+    dt = jnp.bfloat16 if tag == "bf16" else jnp.float32
+    return val.astype(dt)
+
+
+def _is_qleaf(x):
+    return isinstance(x, dict) and set(x) == {"codes", "scale"}
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(
+            lambda p: _zeros_state(p, cfg.state_dtype), params),
+        "v": jax.tree_util.tree_map(
+            lambda p: _zeros_state(p, cfg.state_dtype, True), params),
+    }
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """ParamSpec pytree mirroring adamw_init (for dry-run lowering)."""
+    from ..models.specs import ParamSpec, is_spec
+
+    def moment(s: ParamSpec):
+        if cfg.state_dtype == "int8":
+            return {
+                "codes": ParamSpec(s.shape, jnp.int8, s.axes, "zeros"),
+                "scale": ParamSpec(s.shape[:-1] + (1,) if s.shape else (1,),
+                                   jnp.float32,
+                                   s.axes[:-1] + (None,) if s.axes else (None,),
+                                   "zeros"),
+            }
+        dt = jnp.bfloat16 if cfg.state_dtype == "bf16" else jnp.float32
+        return ParamSpec(s.shape, dt, s.axes, "zeros")
+
+    tm = jax.tree_util.tree_map(moment, param_specs, is_leaf=is_spec)
+    return {"step": ParamSpec((), jnp.int32, (), "zeros"), "m": tm, "v": tm}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if cfg.grad_clip > 0:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    tag = cfg.state_dtype
+
+    def upd(p, g, m_s, v_s):
+        g32 = g.astype(jnp.float32)
+        m = _read_state(m_s, tag)
+        v = _read_state(v_s, tag, True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        delta = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay and p.ndim >= 2:      # decay matrices only
+            delta = delta + cfg.weight_decay * p32
+        new_p = (p32 - lr * delta).astype(p.dtype)
+        return new_p, _write_state(m, tag), _write_state(v, tag, True)
+
+    is_leaf = _is_qleaf if tag == "int8" else None
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_leaf)[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+def sgd_update(grads, params, lr: float):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

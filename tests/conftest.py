@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only dryrun.py (and explicit subprocess tests) force
+# a 512-device host platform.

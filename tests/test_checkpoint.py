@@ -1,0 +1,83 @@
+"""Checkpointing: roundtrip, restart continuation, retention, async, elastic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.models.specs import materialize, param
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _tree(key):
+    specs = {"layer": {"w": param((4, 8), ("embed", "mlp")),
+                       "b": param((8,), ("mlp",), init="zeros")},
+             "head": param((8, 3), ("mlp", "vocab"))}
+    return materialize(key, specs)
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    store.save(str(tmp_path), 7, {"params": t}, extra={"data_step": 7})
+    restored, step, extra = store.restore(str(tmp_path), {"params": t})
+    assert step == 7 and extra["data_step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_continuation_bitwise(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3 more."""
+    cfg = AdamWConfig(lr=1e-2)
+
+    def run(params, opt, steps, start=0):
+        for i in range(start, steps):
+            g = jax.tree_util.tree_map(
+                lambda p: jnp.ones_like(p) * (i + 1) * 0.1, params)
+            params, opt = adamw_update(g, opt, params, cfg)
+        return params, opt
+
+    p0 = _tree(jax.random.PRNGKey(1))
+    o0 = adamw_init(p0, cfg)
+    p_straight, o_straight = run(p0, o0, 6)
+
+    p_half, o_half = run(p0, o0, 3)
+    store.save(str(tmp_path), 3, {"p": p_half, "o": o_half})
+    restored, step, _ = store.restore(str(tmp_path), {"p": p_half, "o": o_half})
+    p_resumed, _ = run(restored["p"], restored["o"], 6, start=step)
+    for a, b in zip(jax.tree_util.tree_leaves(p_straight),
+                    jax.tree_util.tree_leaves(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention(tmp_path):
+    t = {"x": jnp.zeros((2,))}
+    for s in range(6):
+        store.save(str(tmp_path), s, t, keep=3)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4, 5]
+    assert store.latest_step(str(tmp_path)) == 5
+
+
+def test_async_save_then_restore(tmp_path):
+    t = _tree(jax.random.PRNGKey(2))
+    store.save_async(str(tmp_path), 11, {"params": t})
+    store.wait()
+    restored, step, _ = store.restore(str(tmp_path), {"params": t})
+    assert step == 11
+    np.testing.assert_array_equal(np.asarray(restored["params"]["head"]),
+                                  np.asarray(t["head"]))
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    t = {"x": jnp.arange(4.0)}
+    store.save(str(tmp_path), 1, t)
+    assert not any(d.startswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        store.restore(str(tmp_path / "nope"), {"x": jnp.zeros(1)})

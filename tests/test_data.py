@@ -1,0 +1,44 @@
+"""Data pipeline: determinism, resumability, shapes, label alignment."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, batch_for_step, global_batch
+
+
+def test_deterministic_per_step():
+    cfg = DataConfig(vocab=100, batch=4, seq_len=16, seed=7)
+    a1, b1 = batch_for_step(cfg, 3)
+    a2, b2 = batch_for_step(cfg, 3)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+
+
+def test_steps_differ():
+    cfg = DataConfig(vocab=100, batch=4, seq_len=16)
+    a1, _ = batch_for_step(cfg, 0)
+    a2, _ = batch_for_step(cfg, 1)
+    assert not np.array_equal(a1, a2)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, batch=2, seq_len=8)
+    buf = global_batch(cfg, 5)
+    toks, labels = batch_for_step(cfg, 5)
+    np.testing.assert_array_equal(toks, buf[:, :-1])
+    np.testing.assert_array_equal(labels, buf[:, 1:])
+
+
+def test_vocab_bounds():
+    cfg = DataConfig(vocab=37, batch=8, seq_len=32)
+    toks, labels = batch_for_step(cfg, 2)
+    assert toks.min() >= 0 and toks.max() < 37
+    assert toks.shape == (8, 32) and labels.shape == (8, 32)
+
+
+def test_resume_equals_fresh():
+    """Restarting the pipeline at step k (checkpoint contract) reproduces the
+    same stream — the pipeline state IS the step counter."""
+    cfg = DataConfig(vocab=64, batch=2, seq_len=8, seed=1)
+    fresh = [batch_for_step(cfg, i)[0] for i in range(5)]
+    resumed = [batch_for_step(cfg, i)[0] for i in range(3, 5)]
+    np.testing.assert_array_equal(fresh[3], resumed[0])
+    np.testing.assert_array_equal(fresh[4], resumed[1])

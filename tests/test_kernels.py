@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---- LIF --------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128,), (7, 13), (2, 9, 9, 8), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("reset", ["hard", "soft"])
+def test_lif_kernel_matches_ref(shape, dtype, reset):
+    u = jax.random.normal(KEY, shape, dtype)
+    s = (jax.random.uniform(jax.random.PRNGKey(1), shape) < 0.3).astype(dtype)
+    c = jax.random.normal(jax.random.PRNGKey(2), shape, dtype)
+    un, sn = ops.lif_step(u, s, c, reset=reset)
+    ur, sr = ref.lif_ref(u, s, c, reset=reset)
+    np.testing.assert_allclose(np.asarray(un, np.float32),
+                               np.asarray(ur, np.float32), rtol=2e-2, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(sn), np.asarray(sr))
+
+
+def test_lif_kernel_matches_snn_neurons():
+    """Kernel semantics == the BPTT module's forward."""
+    from repro.snn.neurons import LIFConfig, lif_step as lif_module
+    shape = (4, 32)
+    u = jax.random.normal(KEY, shape)
+    s = (jax.random.uniform(jax.random.PRNGKey(1), shape) < 0.5).astype(
+        jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(2), shape)
+    u2, s2 = lif_module(u, s, c, LIFConfig())
+    u3, s3 = ops.lif_step(u, s, c)
+    np.testing.assert_allclose(np.asarray(u2), np.asarray(u3), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s3))
+
+
+# ---- spike matmul --------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 16), (70, 200, 90),
+                                   (128, 384, 256), (1, 128, 128)])
+@pytest.mark.parametrize("density", [0.0, 0.15, 1.0])
+def test_spike_matmul_sweep(m, k, n, density):
+    sp = (jax.random.uniform(KEY, (m, k)) < density).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n), jnp.float32)
+    out = ops.spike_matmul(sp, w)
+    r = ref.spike_matmul_ref(sp, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_spike_matmul_bf16_weights():
+    sp = (jax.random.uniform(KEY, (64, 128)) < 0.2).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 64), jnp.bfloat16)
+    out = ops.spike_matmul(sp, w)
+    r = ref.spike_matmul_ref(sp, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_spike_conv_matches_xla_conv():
+    from repro.snn.layers import conv2d
+    sp = (jax.random.uniform(KEY, (2, 8, 8, 4)) < 0.25).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(5), (3, 3, 4, 8), jnp.float32)
+    out = ops.spike_conv(sp, w)
+    r = conv2d({"w": w}, sp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---- flash attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,h,hkv", [(128, 64, 4, 4), (160, 48, 4, 2),
+                                       (256, 128, 2, 1)])
+@pytest.mark.parametrize("window", [None, 37])
+def test_flash_attention_sweep(s, d, h, hkv, window):
+    b = 2
+    q = jax.random.normal(KEY, (b, h, s, d), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(6), (b, hkv, s, d),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(7), (b, hkv, s, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    r = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    b, h, s, d = 1, 2, 128, 64
+    q = (jax.random.normal(KEY, (b, h, s, d)) * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.PRNGKey(8), (b, h, s, d)) * 0.3).astype(
+        jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(9), (b, h, s, d)).astype(
+        jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    r = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_matches_model_blockwise_attention():
+    """Pallas kernel == the model-side pure-JAX blockwise path (BSHD)."""
+    from repro.models.layers import blockwise_attention
+    b, s, h, d = 2, 128, 4, 32
+    q = jax.random.normal(KEY, (b, s, h, d)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(10), (b, s, h, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(11), (b, s, h, d))
+    out_model = blockwise_attention(q, k, v, q_chunk=64, k_chunk=64)
+    out_kernel = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                     k.transpose(0, 2, 1, 3),
+                                     v.transpose(0, 2, 1, 3),
+                                     block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_model.transpose(0, 2, 1, 3)),
+                               rtol=2e-3, atol=2e-3)

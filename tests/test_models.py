@@ -1,0 +1,154 @@
+"""Per-arch smoke tests (deliverable f): reduced configs, one forward/train step
+on CPU, output shapes + no NaNs; plus prefill/decode == full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import encdec, lm
+from repro.models.encdec import EncDecConfig
+from repro.models.specs import materialize, n_params, shape_structs
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _setup(arch):
+    cfg = get_smoke_config(arch)
+    is_ed = isinstance(cfg, EncDecConfig)
+    specs = encdec.encdec_specs(cfg) if is_ed else lm.lm_specs(cfg)
+    params = materialize(KEY, specs)
+    return cfg, is_ed, params
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg, is_ed, params = _setup(arch)
+    if is_ed:
+        frames = jax.random.normal(KEY, (2, 16, cfg.d_model))
+        tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+        enc = encdec.encode(params, cfg, frames)
+        logits = encdec.decode_train(params, cfg, tokens, enc)
+        assert logits.shape == (2, 12, cfg.vocab)
+    else:
+        tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+        prefix = (jax.random.normal(KEY, (2, cfg.prefix_len, cfg.d_model))
+                  if cfg.prefix_len else None)
+        logits, aux = lm.forward(params, cfg, tokens, prefix)
+        assert logits.shape == (2, 16 + cfg.prefix_len, cfg.vocab)
+        assert bool(jnp.isfinite(aux))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_decreases_loss(arch):
+    cfg, is_ed, params = _setup(arch)
+    opt = adamw_init(params, AdamWConfig(lr=3e-3))
+    if is_ed:
+        frames = jax.random.normal(KEY, (2, 8, cfg.d_model))
+        tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+        labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+
+        def loss_fn(p):
+            return encdec.encdec_loss(p, cfg, frames, tokens, labels)[0]
+    else:
+        tokens = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+        labels = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                    cfg.vocab)
+        prefix = (jax.random.normal(KEY, (2, cfg.prefix_len, cfg.d_model))
+                  if cfg.prefix_len else None)
+
+        def loss_fn(p):
+            return lm.lm_loss(p, cfg, tokens, labels, prefix)[0]
+
+    losses = []
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for _ in range(10):
+        l, g = grad_fn(params)
+        params, opt = adamw_update(g, opt, params, AdamWConfig(lr=5e-3))
+        losses.append(float(l))
+    assert np.isfinite(losses).all()
+    # memorizing a fixed batch: the tail must be below the start
+    assert np.mean(losses[-3:]) < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, is_ed, params = _setup(arch)
+    tol = 2e-4
+    if is_ed:
+        frames = jax.random.normal(KEY, (2, 16, cfg.d_model))
+        s, mx = 8, 12
+        tokens = jax.random.randint(KEY, (2, s), 0, cfg.vocab)
+        enc = encdec.encode(params, cfg, frames)
+        full = encdec.decode_train(params, cfg, tokens, enc)
+        cache = materialize(KEY, encdec.cache_specs(cfg, 2, mx, 16))
+        pre, cache = encdec.prefill(params, cfg, frames, tokens[:, :s - 2],
+                                    cache)
+        errs = [float(jnp.abs(pre[:, 0] - full[:, s - 3]).max())]
+        for i in range(s - 2, s):
+            lg, cache = encdec.decode_step(params, cfg, cache,
+                                           tokens[:, i:i + 1], jnp.int32(i))
+            errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    else:
+        s, mx = 12, 16
+        tokens = jax.random.randint(KEY, (2, s), 0, cfg.vocab)
+        full, _ = lm.forward(params, cfg, tokens)
+        cache = materialize(KEY, lm.cache_specs(cfg, 2, mx))
+        pre, cache = lm.prefill(params, cfg, tokens[:, :s - 2], cache)
+        errs = [float(jnp.abs(pre[:, 0] - full[:, s - 3]).max())]
+        for i in range(s - 2, s):
+            lg, cache = lm.decode_step(params, cfg, cache, tokens[:, i:i + 1],
+                                       jnp.int32(i))
+            errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < tol, errs
+
+
+def test_full_configs_match_assignment_table():
+    """Exact dims from the assignment block."""
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == (2048, 32, 4,
+                                                             151936)
+    assert c.moe.n_experts == 128 and c.moe.top_k == 8 and c.moe.d_ff == 768
+    assert sum(s.count for s in c.segments) == 48
+
+    c = get_config("deepseek-v3-671b")
+    assert (c.d_model, c.n_heads, c.vocab) == (7168, 128, 129280)
+    assert c.moe.n_experts == 256 and c.moe.n_shared == 1 and c.mtp
+    assert sum(s.count for s in c.segments) == 61
+
+    c = get_config("zamba2-2.7b")
+    assert (c.d_model, c.d_ff, c.vocab) == (2560, 10240, 32000)
+    assert c.ssm.d_state == 64 and c.hybrid_period == 6
+
+    c = get_config("phi3-medium-14b")
+    assert (c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (5120, 40, 10, 17920, 100352)
+
+    c = get_config("h2o-danube-1.8b")
+    assert c.window == 4096
+
+    c = get_config("seamless-m4t-medium")
+    assert (c.d_model, c.vocab) == (1024, 256206)
+    assert c.n_enc_layers == 12 and c.n_dec_layers == 12
+
+
+def test_full_param_counts_plausible():
+    """Total params close to the advertised sizes (within 25%)."""
+    expect = {
+        "deepseek-v3-671b": 671e9,
+        "qwen3-moe-30b-a3b": 30.5e9,
+        "phi3-medium-14b": 14e9,
+        "internlm2-1.8b": 1.9e9,
+        "minicpm3-4b": 4e9,
+        "h2o-danube-1.8b": 1.8e9,
+        "llava-next-34b": 34e9,
+    }
+    for arch, n in expect.items():
+        cfg = get_config(arch)
+        total = n_params(lm.lm_specs(cfg))
+        assert abs(total - n) / n < 0.25, (arch, total, n)

@@ -1,0 +1,121 @@
+"""AdamW (+int8 states), grad clip, int8-EF gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, opt_state_specs)
+from repro.train.step import (TrainConfig, compress_grads, error_state_init,
+                              make_train_step)
+from repro.models.specs import ParamSpec, shape_structs
+
+
+def test_adamw_first_step_is_lr_signed():
+    """After bias correction, |first update| == lr for any grad scale."""
+    cfg = AdamWConfig(lr=0.01, eps=1e-12)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params, cfg)
+    grads = {"w": jnp.array([1.0, -3.0, 0.5, -0.1])}
+    new, _ = adamw_update(grads, opt, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"] - new["w"]),
+                               0.01 * np.sign(grads["w"]), rtol=1e-4)
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0)
+    params = {"w": jnp.zeros((1000,))}
+    opt = adamw_init(params, cfg)
+    big = {"w": jnp.full((1000,), 100.0)}
+    _, opt2 = adamw_update(big, opt, params, cfg)
+    m = opt2["m"]["w"]
+    assert float(global_norm({"w": m})) <= 0.11   # (1-b1)*clipped grad norm
+
+
+def test_int8_states_track_fp32():
+    key = jax.random.PRNGKey(0)
+    params32 = {"w": jax.random.normal(key, (64, 128))}
+    params8 = jax.tree_util.tree_map(jnp.copy, params32)
+    c32 = AdamWConfig(lr=1e-2)
+    c8 = AdamWConfig(lr=1e-2, state_dtype="int8")
+    o32, o8 = adamw_init(params32, c32), adamw_init(params8, c8)
+    for i in range(10):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (64, 128))}
+        params32, o32 = adamw_update(g, o32, params32, c32)
+        params8, o8 = adamw_update(g, o8, params8, c8)
+    diff = float(jnp.abs(params32["w"] - params8["w"]).max())
+    scale = float(jnp.abs(params32["w"]).max())
+    assert diff < 0.12 * scale                   # 8-bit moments track closely
+
+
+def test_opt_state_specs_mirror_init():
+    specs = {"a": ParamSpec((8, 16), jnp.float32, ("embed", "mlp")),
+             "b": ParamSpec((4,), jnp.float32, ("embed",))}
+    for dtype in ("fp32", "int8"):
+        cfg = AdamWConfig(state_dtype=dtype)
+        params = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        live = adamw_init(params, cfg)
+        spec_structs = shape_structs(opt_state_specs(specs, cfg))
+        live_shapes = jax.tree_util.tree_map(lambda x: (x.shape, x.dtype),
+                                             live)
+        spec_shapes = jax.tree_util.tree_map(lambda x: (x.shape, x.dtype),
+                                             spec_structs)
+        assert jax.tree_util.tree_structure(live_shapes) == \
+            jax.tree_util.tree_structure(spec_shapes)
+        assert jax.tree_util.tree_leaves(live_shapes) == \
+            jax.tree_util.tree_leaves(spec_shapes)
+
+
+def test_compression_error_feedback_preserves_sum():
+    """EF property: transmitted + residual == original (per step, exactly)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 64)) * 3.0}
+    err = error_state_init(g)
+    sent, resid = compress_grads(g, err)
+    np.testing.assert_allclose(np.asarray(sent["w"] + resid["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_accumulation_matches_full_batch():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = ((pred - batch["y"]) ** 2).mean()
+        return l, {"ce": l}
+
+    key = jax.random.PRNGKey(2)
+    params = {"w": jax.random.normal(key, (8, 1))}
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+    y = jax.random.normal(jax.random.PRNGKey(4), (16, 1))
+    batch = {"x": x, "y": y}
+
+    t1 = TrainConfig(adam=AdamWConfig(lr=1e-2), accum_steps=1)
+    t4 = TrainConfig(adam=AdamWConfig(lr=1e-2), accum_steps=4)
+    s1 = make_train_step(loss_fn, t1)
+    s4 = make_train_step(loss_fn, t4)
+    p1, o1, m1 = s1(params, adamw_init(params, t1.adam), batch)
+    p4, o4, m4 = s4(params, adamw_init(params, t4.adam), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_compressed_training_converges():
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        l = ((pred - batch["y"]) ** 2).mean()
+        return l, {"ce": l}
+
+    key = jax.random.PRNGKey(5)
+    w_true = jax.random.normal(key, (8, 1))
+    x = jax.random.normal(jax.random.PRNGKey(6), (64, 8))
+    y = x @ w_true
+    params = {"w": jnp.zeros((8, 1))}
+    tc = TrainConfig(adam=AdamWConfig(lr=5e-2), grad_compression="int8_ef")
+    step = make_train_step(loss_fn, tc)
+    opt = adamw_init(params, tc.adam)
+    err = error_state_init(params)
+    losses = []
+    for _ in range(60):
+        params, opt, m, err = step(params, opt, {"x": x, "y": y}, err)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.05 * losses[0]

@@ -1,0 +1,96 @@
+"""Balanced compute+storage partitioning (paper §4.2, Fig 4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CoreSpec, LayerProfile, partition_model
+from repro.core.partition import _alloc_largest_remainder, _group_contiguous
+
+
+def _layers(rng, n):
+    return [LayerProfile(f"l{i}", flops=float(rng.uniform(1e8, 1e10)),
+                         weight_bytes=float(rng.uniform(1e4, 1e7)),
+                         out_bytes=float(rng.uniform(1e3, 1e6)),
+                         c_in=64, c_out=64) for i in range(n)]
+
+
+@given(st.integers(0, 1000), st.integers(2, 10), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_partition_exact_core_count(seed, n_layers, mult):
+    rng = np.random.default_rng(seed)
+    layers = _layers(rng, n_layers)
+    n_cores = n_layers * mult
+    for strategy in ("compute", "storage", "balanced"):
+        p = partition_model(layers, n_cores, strategy)
+        assert p.n == n_cores
+        fr = {}
+        for s in p.slices:
+            fr[s.layer] = fr.get(s.layer, 0.0) + s.frac
+        for li, f in fr.items():
+            assert f == pytest.approx(1.0)      # channels fully covered
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_balanced_not_worse_than_compute_or_storage(seed):
+    """The paper's claim: combined balancing avoids the bucket effect."""
+    rng = np.random.default_rng(seed)
+    layers = _layers(rng, 6)
+    core = CoreSpec(sram_bytes=5e5, flops_per_s=1e10, stream_bw=5e9)
+    lat = {}
+    for strategy in ("compute", "storage", "balanced"):
+        p = partition_model(layers, 24, strategy, core)
+        lat[strategy] = p.latencies().max()
+    assert lat["balanced"] <= lat["compute"] * 1.001
+    assert lat["balanced"] <= lat["storage"] * 1.001
+
+
+def test_group_contiguous_covers_all():
+    w = np.array([5, 1, 1, 1, 8, 1, 1, 3.0])
+    groups = _group_contiguous(w, 4)
+    assert groups[0][0] == 0 and groups[-1][1] == len(w)
+    for (a, b), (a2, b2) in zip(groups[:-1], groups[1:]):
+        assert b == a2 and a < b
+    assert len(groups) == 4
+
+
+def test_alloc_largest_remainder_sums():
+    for n in (8, 13, 32):
+        alloc = _alloc_largest_remainder(np.array([1.0, 2.0, 3.0, 10.0]), n)
+        assert alloc.sum() == n
+        assert (alloc >= 1).all()
+
+
+def test_more_layers_than_cores_groups():
+    rng = np.random.default_rng(7)
+    layers = _layers(rng, 54)
+    p = partition_model(layers, 32, "balanced")
+    assert p.n == 32
+    g = p.to_graph()
+    assert g.validate_dag()
+
+
+def test_to_graph_multicast_volumes():
+    layers = [
+        LayerProfile("a", 1e9, 1e5, 1000.0, c_out=64),
+        LayerProfile("b", 1e9, 1e5, 500.0, c_out=64),
+    ]
+    p = partition_model(layers, 4, "compute")
+    g = p.to_graph()
+    # every slice of layer0 multicasts its shard to both slices of layer1
+    slices0 = [i for i, s in enumerate(p.slices) if s.layer == 0]
+    slices1 = [i for i, s in enumerate(p.slices) if s.layer == 1]
+    for i in slices0:
+        for j in slices1:
+            assert g.adj[i, j] == pytest.approx(p.slices[i].out_bytes)
+    feats = g.node_features()
+    assert (feats[slices0, 0] == 1.0).all()     # multicast flag set
+
+
+def test_spill_latency_model():
+    core = CoreSpec(sram_bytes=1e6, flops_per_s=1e9, stream_bw=1e9)
+    fits = LayerProfile("fits", 1e9, 9e5, 1.0)
+    spills = LayerProfile("spills", 1e9, 2e6, 1.0)
+    pf = partition_model([fits], 1, "balanced", core)
+    ps = partition_model([spills], 1, "balanced", core)
+    assert ps.latencies()[0] > pf.latencies()[0]
