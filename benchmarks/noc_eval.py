@@ -1,0 +1,100 @@
+"""Benchmark: reference per-edge ``NoC.evaluate`` loop vs the batched evaluator.
+
+Sweeps population sizes {1, 16, 64, 256} on an 8×8 mesh and a 16×16 torus
+(the v5e-pod shape), timing three scorers:
+
+* ``reference``  — sequential ``NoC.evaluate`` per placement (the seed hot path);
+* ``batch_numpy``— ``noc_batch.evaluate_batch(backend="numpy")`` full metrics;
+* ``batch_jax``  — same via jit+vmap (timed after a warm-up call), when jax
+  is importable;
+
+plus the comm-cost-only scorer the optimizers use. Emits
+``results/BENCH_noc_eval.json`` and the usual run.py CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import RESULTS_DIR
+from repro.core import NoC, random_dag
+from repro.core import noc_batch
+
+POPS = (1, 16, 64, 256)
+TOPOLOGIES = ((8, 8, False), (16, 16, True))
+
+
+def _time(fn, repeats: int = 1) -> float:
+    t0 = time.time()
+    for _ in range(repeats):
+        fn()
+    return (time.time() - t0) / repeats
+
+
+def noc_eval():
+    rows_out = []
+    record = {"populations": list(POPS), "cases": []}
+    for (R, C, torus) in TOPOLOGIES:
+        noc = NoC(R, C, torus=torus)
+        n = noc.n_cores
+        graph = random_dag(n, p=0.06 if n > 100 else 0.15, seed=0)
+        t0 = time.time()
+        bn = noc_batch.batched_noc(noc)
+        build_s = time.time() - t0
+        n_edges = len(graph.edges)
+        rng = np.random.default_rng(1)
+        case = {"rows": R, "cols": C, "torus": torus, "n_edges": n_edges,
+                "table_build_s": build_s, "sweeps": []}
+        for pop in POPS:
+            P = np.stack([rng.permutation(n) for _ in range(pop)])
+            ref_s = _time(lambda: [noc.evaluate(graph, p) for p in P])
+            np_s = _time(lambda: bn.evaluate(graph, P, backend="numpy"))
+            score_np = noc_batch.make_scorer(noc, graph, "batch")
+            cost_np_s = _time(lambda: score_np(P), repeats=3)
+            sweep = {
+                "pop": pop,
+                "reference_s": ref_s,
+                "batch_numpy_s": np_s,
+                "speedup_numpy": ref_s / max(np_s, 1e-12),
+                "comm_cost_numpy_s": cost_np_s,
+                "speedup_comm_numpy": ref_s / max(cost_np_s, 1e-12),
+            }
+            if noc_batch.HAS_JAX:
+                bn.evaluate(graph, P, backend="jax")     # warm-up / compile
+                jax_s = _time(lambda: bn.evaluate(graph, P, backend="jax"),
+                              repeats=3)
+                score_jax = noc_batch.make_scorer(noc, graph, "jax")
+                score_jax(P)                             # warm-up / compile
+                cost_jax_s = _time(lambda: score_jax(P), repeats=3)
+                sweep.update({
+                    "batch_jax_s": jax_s,
+                    "speedup_jax": ref_s / max(jax_s, 1e-12),
+                    "comm_cost_jax_s": cost_jax_s,
+                    "speedup_comm_jax": ref_s / max(cost_jax_s, 1e-12),
+                })
+            case["sweeps"].append(sweep)
+            best = max(sweep.get("speedup_jax", 0.0), sweep["speedup_numpy"])
+            rows_out.append((
+                f"noc_eval.{R}x{C}{'t' if torus else ''}.pop{pop}",
+                ref_s * 1e6,
+                f"ref={ref_s*1e3:.1f}ms batch_np={np_s*1e3:.2f}ms "
+                f"x{sweep['speedup_numpy']:.1f}"
+                + (f" batch_jax={sweep['batch_jax_s']*1e3:.2f}ms "
+                   f"x{sweep['speedup_jax']:.1f}" if "speedup_jax" in sweep
+                   else "")
+                + f" best_x{best:.1f}"))
+        record["cases"].append(case)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, "BENCH_noc_eval.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    rows_out.append(("noc_eval.json", 0.0, f"wrote {os.path.relpath(out)}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    for name, us, derived in noc_eval():
+        print(f"{name},{us:.1f},{derived}")

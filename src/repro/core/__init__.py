@@ -1,6 +1,8 @@
 """The paper's contribution: balanced partitioning + RL core placement + pipelining."""
 from .graph import LogicalGraph, chain_graph, random_dag  # noqa: F401
 from .noc import NoC, NoCMetrics  # noqa: F401
+from .noc_batch import (BatchedNoC, BatchMetrics, batched_noc,  # noqa: F401
+                        comm_cost_batch, directional_cdv_batch, evaluate_batch)
 from .partition import (CoreSpec, LayerProfile, Partition,  # noqa: F401
                         partition_model)
-from . import pipeline, tpu_adapter  # noqa: F401
+from . import noc_batch, pipeline, tpu_adapter  # noqa: F401

@@ -105,7 +105,7 @@ class NoC:
         Placement must be injective (paper Definition C: |A| <= |N|).
         """
         placement = np.asarray(placement, dtype=int)
-        if len(set(placement.tolist())) != len(placement):
+        if np.unique(placement).size != placement.size:
             raise ValueError("placement must map nodes to distinct cores")
         if placement.max(initial=-1) >= self.n_cores or placement.min(initial=0) < 0:
             raise ValueError("placement out of range")
@@ -127,7 +127,6 @@ class NoC:
             for (a, b) in links:
                 link_traffic[(a, b)] = link_traffic.get((a, b), 0.0) + vol
                 core_traffic[b] += vol          # traffic arriving into router b
-            core_traffic[self.coord(src)] += 0  # source injection counted via links
 
         # Analytic latency model: a step's makespan is bounded by the slowest
         # core (compute + its router traffic serialized on link_bw) plus the

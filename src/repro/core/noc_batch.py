@@ -1,0 +1,475 @@
+"""Batched, table-driven NoC evaluation — the repo's hottest path, vectorized.
+
+``NoC.evaluate`` re-derives XY/torus routes edge-by-edge in Python on every call,
+and every placement optimizer (`ppo`, `policy_baseline`, the `baselines` searches)
+calls it once per candidate placement, thousands of times per run. This module
+precomputes, once per topology:
+
+* ``hops[n, n]``                  — all-pairs hop distances (== route lengths, since
+  XY routes are shortest paths);
+* ``route_links[n, n, max_hops]`` — the deterministic route of every (src, dst)
+  pair as padded directed-link ids, built by replaying the reference
+  :meth:`NoC.route`, so tie-breaks (clockwise on even tori) match bit-for-bit;
+* ``link_dst[n_links]``           — destination core of every directed link.
+
+A directed link is identified as ``src_core * 4 + direction`` with directions
+L/R/U/D = 0/1/2/3, the ordering of :meth:`NoC.directional_cdv`. Every metric of
+:class:`repro.core.noc.NoCMetrics` then becomes gather + segment-sum over these
+tables, batched over a population axis:
+
+* **numpy backend** — float64; reproduces the reference loop exactly on
+  integer-volume graphs (sum of exactly-representable products), which is why it
+  is the default *scoring* backend: optimizers keep their seed-for-seed results
+  while scoring whole populations per call;
+* **jax backend** — ``jax.jit`` + ``jax.vmap`` (float32 unless x64 is enabled),
+  an explicit opt-in for accelerator hosts and large populations
+  (``backend="auto"`` picks numpy: exact, and faster on CPU-only hosts).
+
+Entry points: :func:`evaluate_batch`, :func:`comm_cost_batch`,
+:func:`directional_cdv_batch`, and :func:`make_scorer` (the comm-cost-only
+closure the optimizers use).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import LogicalGraph
+from .noc import NoC
+
+# JAX is only needed for backend="jax"; detect cheaply, import lazily so that
+# `import repro.core` (and the default numpy scoring path) stays light.
+import importlib.util
+
+HAS_JAX = importlib.util.find_spec("jax") is not None
+jax = None
+jnp = None
+
+
+def _import_jax():
+    global jax, jnp
+    if jax is None:  # pragma: no branch - trivial memoization
+        import jax as _jax
+        import jax.numpy as _jnp
+        jax, jnp = _jax, _jnp
+    return jax, jnp
+
+
+def _jx_float():
+    """float64 when x64 is enabled (reference-grade precision; summation
+    order can still differ in the last ulp), else float32."""
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+# Directed-link direction slots; same order as NoC.directional_cdv.
+L, R, U, D = 0, 1, 2, 3
+_OPP = np.array([R, L, D, U], dtype=np.int64)
+
+# Soft cap on elements materialized per numpy scatter chunk (memory guard).
+_CHUNK_ELEMS = 20_000_000
+
+
+# ---------------------------------------------------------------------------
+# Topology tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NoCTables:
+    """Per-topology routing tensors (independent of link_bw / core_flops)."""
+    rows: int
+    cols: int
+    torus: bool
+    hops: np.ndarray          # [n, n] int32 shortest hop distance
+    route_links: np.ndarray   # [n, n, max_hops] int32 link ids, padded with n_links
+    link_dst: np.ndarray      # [n_links] int32 destination core of each link
+    cdv_in_ids: np.ndarray    # [n_links] int32 cdv slot credited on the receiver
+    max_hops: int
+
+    @property
+    def n_cores(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def n_links(self) -> int:
+        return 4 * self.n_cores
+
+
+def _link_id(rows: int, cols: int, a, b) -> int:
+    """Directed link ((r,c),(r',c')) -> src_core*4 + {L,R,U,D}."""
+    (r0, c0), (r1, c1) = a, b
+    src = r0 * cols + c0
+    if r0 == r1:
+        d = R if (c1 - c0) % cols == 1 else L
+    else:
+        d = D if (r1 - r0) % rows == 1 else U
+    return src * 4 + d
+
+
+def build_tables(noc: NoC) -> NoCTables:
+    """Replay the reference router over all (src, dst) pairs into dense tables."""
+    n, rows, cols = noc.n_cores, noc.rows, noc.cols
+    idx = np.arange(n)
+    r, c = idx // cols, idx % cols
+    if noc.torus:
+        dr = np.minimum((r[:, None] - r[None, :]) % rows,
+                        (r[None, :] - r[:, None]) % rows)
+        dc = np.minimum((c[:, None] - c[None, :]) % cols,
+                        (c[None, :] - c[:, None]) % cols)
+    else:
+        dr = np.abs(r[:, None] - r[None, :])
+        dc = np.abs(c[:, None] - c[None, :])
+    hops = (dr + dc).astype(np.int32)
+    max_hops = int(hops.max()) if n else 0
+    n_links = 4 * n
+
+    route_links = np.full((n, n, max_hops), n_links, dtype=np.int32)
+    for s in range(n):
+        for d in range(n):
+            if s == d:
+                continue
+            ids = [_link_id(rows, cols, a, b) for a, b in noc.route(s, d)]
+            route_links[s, d, :len(ids)] = ids
+
+    link_dst = np.empty(n_links, dtype=np.int32)
+    for core in range(n):
+        rr, cc = divmod(core, cols)
+        link_dst[core * 4 + L] = rr * cols + (cc - 1) % cols
+        link_dst[core * 4 + R] = rr * cols + (cc + 1) % cols
+        link_dst[core * 4 + U] = ((rr - 1) % rows) * cols + cc
+        link_dst[core * 4 + D] = ((rr + 1) % rows) * cols + cc
+    dirs = np.tile(np.arange(4, dtype=np.int64), n)
+    cdv_in_ids = (link_dst.astype(np.int64) * 4 + _OPP[dirs]).astype(np.int32)
+    return NoCTables(rows, cols, noc.torus, hops, route_links, link_dst,
+                     cdv_in_ids, max_hops)
+
+
+def _check_placements(placements, n_nodes: int, n_cores: int | None):
+    """Coerce to [B, n] int64; validate range + injectivity when ``n_cores``
+    is given (the checks ``NoC.evaluate`` performs)."""
+    P = np.asarray(placements, dtype=np.int64)
+    if P.ndim == 1:
+        P = P[None, :]
+    if P.ndim != 2 or P.shape[1] != n_nodes:
+        raise ValueError(f"placements must be [B, {n_nodes}], got {P.shape}")
+    if n_cores is not None and P.size:
+        if P.min() < 0 or P.max() >= n_cores:
+            raise ValueError("placement out of range")
+        s = np.sort(P, axis=1)
+        if np.any(s[:, 1:] == s[:, :-1]):
+            raise ValueError("placement must map nodes to distinct cores")
+    return P
+
+
+# ---------------------------------------------------------------------------
+# Batched metrics container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchMetrics:
+    """Population-axis counterpart of :class:`NoCMetrics` (arrays over B)."""
+    comm_cost: np.ndarray     # [B] Σ bytes × hops
+    mean_hops: np.ndarray     # [B] traffic-weighted mean hop distance
+    max_hops: np.ndarray      # [B] longest routed path (int)
+    max_link: np.ndarray      # [B] hottest link bytes
+    latency: np.ndarray       # [B] analytic makespan (s)
+    throughput: np.ndarray    # [B] 1 / latency
+    core_traffic: np.ndarray  # [B, rows, cols] bytes routed through each core
+    link_traffic: np.ndarray  # [B, n_links] bytes per directed link (core*4+dir)
+
+
+# ---------------------------------------------------------------------------
+# The batched evaluator
+# ---------------------------------------------------------------------------
+
+class BatchedNoC:
+    """Vectorized evaluator for one :class:`NoC` topology.
+
+    Tables are built once at construction (one Python pass over all core pairs)
+    and reused for every graph/population scored afterwards. Use the module
+    cache :func:`batched_noc` rather than constructing directly.
+    """
+
+    def __init__(self, noc: NoC):
+        self.noc = noc
+        self.tables = build_tables(noc)
+        self._jax_fns: dict = {}
+
+    # ---- inputs ------------------------------------------------------------
+    def edge_arrays(self, graph: LogicalGraph):
+        """(src, dst, vol, compute) in the same order as ``graph.edges``."""
+        src, dst = np.nonzero(graph.adj)
+        vol = graph.adj[src, dst].astype(np.float64)
+        return (src.astype(np.int64), dst.astype(np.int64), vol,
+                np.asarray(graph.compute, np.float64))
+
+    def _placements(self, placements, n_nodes: int, validate: bool):
+        return _check_placements(placements, n_nodes,
+                                 self.tables.n_cores if validate else None)
+
+    def _resolve(self, backend: str) -> str:
+        if backend == "auto":
+            # The numpy path is float64-exact and faster on CPU-only hosts
+            # (scatter-heavy jnp ops lose to np.bincount there); jax is an
+            # explicit opt-in for accelerator hosts.
+            return "numpy"
+        if backend in ("numpy", "batch"):
+            return "numpy"
+        if backend == "jax":
+            if not HAS_JAX:
+                raise RuntimeError("backend='jax' requested but jax is not "
+                                   "importable; use 'numpy' or 'auto'")
+            return "jax"
+        if backend == "reference":
+            raise ValueError("backend='reference' is the sequential "
+                             "NoC.evaluate loop; call noc.evaluate directly or "
+                             "use make_scorer(noc, graph, 'reference')")
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "choose 'auto' | 'jax' | 'numpy' | 'batch'")
+
+    # ---- comm cost only (the optimizer scoring path) -----------------------
+    def comm_cost(self, graph: LogicalGraph, placements,
+                  backend: str = "auto", validate: bool = True) -> np.ndarray:
+        src, dst, vol, _ = self.edge_arrays(graph)
+        P = self._placements(placements, graph.n, validate)
+        if src.size == 0 or P.shape[0] == 0:
+            return np.zeros(P.shape[0])
+        if self._resolve(backend) == "jax":
+            f = self._get_jax_fn("comm")
+            return np.asarray(f(jnp.asarray(P), jnp.asarray(src),
+                                jnp.asarray(dst),
+                                jnp.asarray(vol, _jx_float())), np.float64)
+        h = self.tables.hops[P[:, src], P[:, dst]]          # [B, E]
+        return (h * vol[None, :]).sum(axis=1)
+
+    # ---- full metrics ------------------------------------------------------
+    def evaluate(self, graph: LogicalGraph, placements,
+                 backend: str = "auto", validate: bool = True) -> BatchMetrics:
+        t, noc = self.tables, self.noc
+        src, dst, vol, compute = self.edge_arrays(graph)
+        P = self._placements(placements, graph.n, validate)
+        B = P.shape[0]
+        if src.size == 0:
+            comp = np.zeros((B, t.n_cores))
+            if P.size:
+                comp[np.arange(B)[:, None], P] = compute[None, :] / noc.core_flops
+            latency = comp.max(axis=1) if graph.n else np.zeros(B)
+            return BatchMetrics(
+                comm_cost=np.zeros(B), mean_hops=np.zeros(B),
+                max_hops=np.zeros(B, int), max_link=np.zeros(B),
+                latency=latency,
+                throughput=np.where(latency > 0, 1.0 / np.maximum(latency, 1e-300),
+                                    np.inf),
+                core_traffic=np.zeros((B, t.rows, t.cols)),
+                link_traffic=np.zeros((B, t.n_links)))
+        if self._resolve(backend) == "jax":
+            f = self._get_jax_fn("full")
+            cc, h_max, lt, core_tr, per_core_max = f(
+                jnp.asarray(P), jnp.asarray(src), jnp.asarray(dst),
+                jnp.asarray(vol, _jx_float()),
+                jnp.asarray(compute / noc.core_flops, _jx_float()))
+            cc = np.asarray(cc, np.float64)
+            h_max = np.asarray(h_max, np.int64)
+            lt = np.asarray(lt, np.float64)
+            core_tr = np.asarray(core_tr, np.float64)
+            per_core_max = np.asarray(per_core_max, np.float64)
+        else:
+            cc, h_max, lt, core_tr, per_core_max = self._numpy_full(
+                P, src, dst, vol, compute)
+        total = vol.sum()
+        latency = per_core_max + h_max * noc.hop_latency
+        return BatchMetrics(
+            comm_cost=cc,
+            mean_hops=cc / total if total else np.zeros(B),
+            max_hops=h_max,
+            max_link=lt.max(axis=1),
+            latency=latency,
+            throughput=np.where(latency > 0, 1.0 / np.maximum(latency, 1e-300),
+                                np.inf),
+            core_traffic=core_tr.reshape(B, t.rows, t.cols),
+            link_traffic=lt)
+
+    def _numpy_full(self, P, src, dst, vol, compute):
+        t, noc = self.tables, self.noc
+        B, E = P.shape[0], src.size
+        n, n_links, mh = t.n_cores, t.n_links, max(t.max_hops, 1)
+        cc = np.empty(B)
+        h_max = np.empty(B, dtype=np.int64)
+        lt = np.empty((B, n_links))
+        core_tr = np.empty((B, n))
+        per_core_max = np.empty(B)
+        chunk = max(1, _CHUNK_ELEMS // max(E * mh, 1))
+        for b0 in range(0, B, chunk):
+            Pb = P[b0:b0 + chunk]
+            bsz = Pb.shape[0]
+            s, d = Pb[:, src], Pb[:, dst]                    # [b, E]
+            h = t.hops[s, d]
+            cc[b0:b0 + bsz] = (h * vol[None, :]).sum(axis=1)
+            h_max[b0:b0 + bsz] = h.max(axis=1)
+            ids = t.route_links[s, d].astype(np.int64)       # [b, E, max_hops]
+            ids += (np.arange(bsz) * (n_links + 1))[:, None, None]
+            w = np.broadcast_to(vol[None, :, None], ids.shape)
+            ltb = np.bincount(ids.ravel(), weights=w.ravel(),
+                              minlength=bsz * (n_links + 1))
+            ltb = ltb.reshape(bsz, n_links + 1)[:, :n_links]
+            lt[b0:b0 + bsz] = ltb
+            dst_flat = (t.link_dst.astype(np.int64)[None, :]
+                        + (np.arange(bsz) * n)[:, None])
+            ctb = np.bincount(dst_flat.ravel(), weights=ltb.ravel(),
+                              minlength=bsz * n).reshape(bsz, n)
+            core_tr[b0:b0 + bsz] = ctb
+            comp = np.zeros((bsz, n))
+            comp[np.arange(bsz)[:, None], Pb] = compute[None, :] / noc.core_flops
+            per_core_max[b0:b0 + bsz] = (comp + ctb / noc.link_bw).max(axis=1)
+        return cc, h_max, lt, core_tr, per_core_max
+
+    # ---- directional CDV (paper Eq. 4 terms) -------------------------------
+    def directional_cdv(self, graph: LogicalGraph, placements,
+                        backend: str = "auto",
+                        validate: bool = True) -> np.ndarray:
+        """[B, rows, cols, 4] bytes crossing each L/R/U/D link of every core."""
+        t = self.tables
+        lt = self.evaluate(graph, placements, backend=backend,
+                           validate=validate).link_traffic
+        B = lt.shape[0]
+        cdv = lt.copy()
+        np.add.at(cdv, (np.arange(B)[:, None],
+                        t.cdv_in_ids.astype(np.int64)[None, :]), lt)
+        return cdv.reshape(B, t.rows, t.cols, 4)
+
+    # ---- jitted kernels ----------------------------------------------------
+    def _get_jax_fn(self, kind: str):
+        fn = self._jax_fns.get(kind)
+        if fn is not None:
+            return fn
+        _import_jax()
+        t = self.tables
+        hops = jnp.asarray(t.hops)
+        flat_routes = jnp.asarray(
+            t.route_links.reshape(t.n_cores * t.n_cores, t.max_hops)
+            if t.max_hops else
+            t.route_links.reshape(t.n_cores * t.n_cores, 0))
+        link_dst = jnp.asarray(t.link_dst.astype(np.int32))
+        n, n_links = t.n_cores, t.n_links
+
+        if kind == "comm":
+            @jax.jit
+            def fn(P, src, dst, vol):
+                h = hops[P[:, src], P[:, dst]]               # [B, E]
+                return (h.astype(vol.dtype) * vol[None, :]).sum(axis=1)
+        else:
+            def one(p, src, dst, vol, comp_nodes):
+                s, d = p[src], p[dst]
+                h = hops[s, d]
+                cc = jnp.sum(h.astype(vol.dtype) * vol)
+                ids = flat_routes[s * n + d]                 # [E, max_hops]
+                w = jnp.broadcast_to(vol[:, None], ids.shape)
+                lt = jnp.zeros(n_links + 1, vol.dtype).at[ids.reshape(-1)].add(
+                    w.reshape(-1))[:n_links]
+                core_tr = jnp.zeros(n, vol.dtype).at[link_dst].add(lt)
+                comp = jnp.zeros(n, vol.dtype).at[p].set(comp_nodes)
+                per_core_max = (comp + core_tr / self.noc.link_bw).max()
+                return cc, jnp.max(h), lt, core_tr, per_core_max
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, None, None, None, None)))
+        self._jax_fns[kind] = fn
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# Module-level cache + functional API
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+
+
+def batched_noc(noc: NoC) -> BatchedNoC:
+    """Cached :class:`BatchedNoC` per topology (+ bandwidth/latency params)."""
+    key = (noc.rows, noc.cols, noc.torus, noc.link_bw, noc.core_flops,
+           noc.hop_latency)
+    b = _CACHE.get(key)
+    if b is None:
+        b = _CACHE[key] = BatchedNoC(noc)
+    return b
+
+
+def evaluate_batch(noc: NoC, graph: LogicalGraph, placements,
+                   backend: str = "auto") -> BatchMetrics:
+    """Score a [B, n] population of placements in one vectorized call."""
+    return batched_noc(noc).evaluate(graph, placements, backend=backend)
+
+
+def comm_cost_batch(noc: NoC, graph: LogicalGraph, placements,
+                    backend: str = "auto") -> np.ndarray:
+    """[B] comm_cost (== the CDV objective of Eq. 4, negated reward)."""
+    return batched_noc(noc).comm_cost(graph, placements, backend=backend)
+
+
+def directional_cdv_batch(noc: NoC, graph: LogicalGraph, placements,
+                          backend: str = "auto") -> np.ndarray:
+    """[B, rows, cols, 4] per-core directional CDV, batched."""
+    return batched_noc(noc).directional_cdv(graph, placements, backend=backend)
+
+
+def validate_placements(noc: NoC, placements, n_nodes: int) -> np.ndarray:
+    """Check a [B, n] (or [n]) placement array the way ``NoC.evaluate`` does
+    (injective, in range); returns the 2-D int64 array. For validating user
+    input once before handing it to an unvalidated scorer. Needs only
+    ``noc.n_cores`` — does not build (or cache) routing tables."""
+    return _check_placements(placements, n_nodes, noc.n_cores)
+
+
+# Backends accepted by optimizers: "batch" (vectorized numpy float64 — exact
+# parity with the reference loop on integer-volume graphs), "jax" (jit+vmap,
+# explicit opt-in), "auto" (currently the numpy path; see _resolve),
+# "reference" (original Python loop).
+SCORER_BACKENDS = ("batch", "numpy", "jax", "auto", "reference")
+
+
+def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch"):
+    """Build ``placements [B, n] -> comm_cost [B]`` for the hot loops.
+
+    ``backend="batch"`` keeps optimizer trajectories bit-identical to the
+    sequential reference on integer-volume graphs (float64 all the way), which
+    is why it is the optimizers' default. On continuous volumes the vectorized
+    sum can differ from the sequential loop in the last ulp (pairwise vs
+    sequential float64 summation) — pass ``backend="reference"`` when exact
+    seed-reproduction of pre-noc_batch trajectories on such graphs matters.
+    """
+    if backend not in SCORER_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {SCORER_BACKENDS}")
+    if backend == "reference":
+        def score_ref(placements):
+            P = np.atleast_2d(np.asarray(placements, dtype=int))
+            return np.array([noc.evaluate(graph, p).comm_cost for p in P])
+        return score_ref
+    b = batched_noc(noc)
+    # Bind the edge arrays once — scorers are called per optimizer step (B=1
+    # in sequential SA), so the O(n^2) nonzero scan must not be per-call.
+    # No per-call validation: optimizer-generated placements are injective by
+    # construction, and callers feeding user input (e.g. SA's ``init``) must
+    # validate it once up front (see validate_placements).
+    src, dst, vol, _ = b.edge_arrays(graph)
+    if b._resolve(backend) == "jax":
+        f = b._get_jax_fn("comm")
+        jsrc, jdst = jnp.asarray(src), jnp.asarray(dst)
+        jvol = jnp.asarray(vol, _jx_float())
+
+        def score(placements):
+            P = np.asarray(placements, dtype=np.int64)
+            if P.ndim == 1:
+                P = P[None, :]
+            if P.shape[0] == 0 or src.size == 0:
+                return np.zeros(P.shape[0])
+            return np.asarray(f(jnp.asarray(P), jsrc, jdst, jvol), np.float64)
+    else:
+        hops = b.tables.hops
+
+        def score(placements):
+            P = np.asarray(placements, dtype=np.int64)
+            if P.ndim == 1:
+                P = P[None, :]
+            if P.shape[0] == 0 or src.size == 0:
+                return np.zeros(P.shape[0])
+            return (hops[P[:, src], P[:, dst]] * vol[None, :]).sum(axis=1)
+    return score

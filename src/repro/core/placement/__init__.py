@@ -1,2 +1,4 @@
-from .optimizer import optimize_placement, PlacementResult  # noqa: F401
+from .optimizer import optimize_placement, PlacementResult, METHODS  # noqa: F401
 from .baselines import zigzag, sigmate, random_search, simulated_annealing  # noqa: F401
+from .population import (random_search_population,  # noqa: F401
+                         simulated_annealing_population)

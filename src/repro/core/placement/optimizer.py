@@ -3,6 +3,14 @@
 ``optimize_placement(graph, noc, method=...)`` dispatches to all implemented methods
 and returns a uniform :class:`PlacementResult`, so benchmarks and the TPU adapter can
 sweep methods with one call.
+
+Every search method scores candidates through a pluggable ``backend``:
+``"batch"`` (default — vectorized float64 :mod:`repro.core.noc_batch`,
+bit-identical to the reference loop on integer-volume graphs, last-ulp
+summation differences possible on continuous volumes), ``"jax"`` (jit+vmap,
+for accelerator hosts / big populations), or ``"reference"`` (the original
+per-edge Python loop). The ``population_*`` methods score whole populations
+per call.
 """
 from __future__ import annotations
 
@@ -11,7 +19,7 @@ import time
 
 import numpy as np
 
-from . import baselines
+from . import baselines, population
 from .policy_baseline import PolicyConfig, run_policy_baseline
 from .ppo import PPOConfig, run_ppo
 
@@ -41,33 +49,60 @@ class PlacementResult:
 
 
 METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
-           "greedy", "policy", "ppo")
+           "greedy", "policy", "ppo",
+           "population_random_search", "population_simulated_annealing")
 
 
 def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
-                       budget: int | None = None, **kw) -> PlacementResult:
+                       budget: int | None = None, backend: str | None = None,
+                       **kw) -> PlacementResult:
+    """``backend=None`` means the default ("batch" — and for ppo/policy, a
+    caller-supplied ``cfg`` keeps its own backend); an explicit value
+    overrides everywhere, including a passed ``cfg``."""
     t0 = time.time()
     history = None
+    bk = backend or "batch"
     if method == "zigzag":
         placement = baselines.zigzag(graph.n, noc)
     elif method == "sigmate":
         placement = baselines.sigmate(graph.n, noc)
     elif method == "random_search":
-        placement = baselines.random_search(graph, noc, iters=budget or 2000,
-                                            seed=seed)
+        placement = baselines.random_search(
+            graph, noc, iters=kw.pop("iters", None) or budget or 2000,
+            seed=seed, backend=bk, **kw)
     elif method == "simulated_annealing":
-        placement = baselines.simulated_annealing(graph, noc,
-                                                  iters=budget or 5000, seed=seed)
+        placement = baselines.simulated_annealing(
+            graph, noc, iters=kw.pop("iters", None) or budget or 5000,
+            seed=seed, backend=bk, **kw)
+    elif method == "population_random_search":
+        placement = population.random_search_population(
+            graph, noc, iters=kw.pop("iters", None) or budget or 2000,
+            seed=seed, backend=bk, **kw)
+    elif method == "population_simulated_annealing":
+        # budget counts total evaluations for every method; population SA
+        # performs pop_size evaluations per lock-step iteration
+        pop = max(1, kw.get("pop_size", 16))
+        iters = kw.pop("iters", None) or max(1, (budget or 16000) // pop)
+        placement = population.simulated_annealing_population(
+            graph, noc, iters=iters, seed=seed, backend=bk, **kw)
     elif method == "greedy":
         placement = baselines.greedy(graph, noc)
     elif method == "policy":
-        cfg = kw.pop("cfg", None) or PolicyConfig(
-            iterations=budget or 40, seed=seed, **kw)
+        cfg = kw.pop("cfg", None)
+        if cfg is None:
+            cfg = PolicyConfig(iterations=budget or 40, seed=seed, backend=bk,
+                               **kw)
+        elif backend is not None:
+            cfg = dataclasses.replace(cfg, backend=backend)
         out = run_policy_baseline(graph, noc, cfg)
         placement, history = out["best_placement"], out["history"]
     elif method == "ppo":
-        cfg = kw.pop("cfg", None) or PPOConfig(iterations=budget or 40, seed=seed,
-                                               **kw)
+        cfg = kw.pop("cfg", None)
+        if cfg is None:
+            cfg = PPOConfig(iterations=budget or 40, seed=seed, backend=bk,
+                            **kw)
+        elif backend is not None:
+            cfg = dataclasses.replace(cfg, backend=backend)
         st = run_ppo(graph, noc, cfg)
         placement, history = st.best_placement, st.history
     else:

@@ -19,6 +19,7 @@ import numpy as np
 
 from ...models.specs import param, materialize
 from ...train.optim import AdamWConfig, adamw_init, adamw_update
+from ..noc_batch import make_scorer
 
 
 @dataclasses.dataclass
@@ -29,6 +30,7 @@ class PolicyConfig:
     d_hidden: int = 64
     baseline_decay: float = 0.9
     seed: int = 0
+    backend: str = "batch"      # candidate scoring: "batch"|"jax"|"reference"
 
 
 def policy_specs(d_feat: int, n_cores: int, d_hidden: int):
@@ -101,6 +103,7 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
     feats = jnp.asarray(graph.node_features(), jnp.float32)
     params = materialize(key, policy_specs(feats.shape[1], noc.n_cores, cfg.d_hidden))
     opt = adamw_init(params, AdamWConfig(lr=cfg.lr))
+    score = make_scorer(noc, graph, cfg.backend)
     baseline = None
     best_cost, best_placement = np.inf, None
     history = []
@@ -109,7 +112,7 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
         logits = policy_logits(params, feats)
         placements, _ = sample_placements(k, logits, cfg.batch_size)
         placements_np = np.asarray(placements)
-        costs = np.array([noc.evaluate(graph, p).comm_cost for p in placements_np])
+        costs = score(placements_np)     # whole candidate set in one call
         i = int(costs.argmin())
         if costs[i] < best_cost:
             best_cost, best_placement = float(costs[i]), placements_np[i].copy()

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...train.optim import AdamWConfig, adamw_init, adamw_update
+from ..noc_batch import make_scorer
 from . import actor_critic as ac
 from .discretize import actions_to_placement
 
@@ -37,6 +38,7 @@ class PPOConfig:
     freeze_gcn: bool = True     # paper: GCN pre-trained, not updated by PPO
     action_clip: float = 1.0
     seed: int = 0
+    backend: str = "batch"      # rollout scoring: "batch"|"jax"|"reference"
 
 
 def _freeze_gcn_grads(grads):
@@ -104,6 +106,7 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
         baseline_cost = noc.evaluate(graph, zigzag(graph.n, noc)).comm_cost
     baseline_cost = max(baseline_cost, 1e-12)
 
+    score = make_scorer(noc, graph, cfg.backend)
     best_cost, best_placement = np.inf, None
     history = []
     for it in range(cfg.iterations):
@@ -111,13 +114,14 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
         mu, log_std = ac.actor_apply(actor, lap, feats)
         acts, logp_old = ac.sample_actions(k_s, mu, log_std, cfg.batch_size)
         acts_np = np.asarray(acts, np.float64)
-        costs = np.empty(cfg.batch_size)
-        for b in range(cfg.batch_size):
-            placement = actions_to_placement(acts_np[b], noc.rows, noc.cols,
-                                             cfg.action_clip, priority)
-            costs[b] = noc.evaluate(graph, placement).comm_cost
-            if costs[b] < best_cost:
-                best_cost, best_placement = costs[b], placement
+        placements = np.stack([
+            actions_to_placement(acts_np[b], noc.rows, noc.cols,
+                                 cfg.action_clip, priority)
+            for b in range(cfg.batch_size)])
+        costs = score(placements)        # whole rollout batch in one call
+        b_min = int(costs.argmin())
+        if costs[b_min] < best_cost:
+            best_cost, best_placement = costs[b_min], placements[b_min]
         rewards = np.clip(cfg.reward_clip * (baseline_cost - costs) / baseline_cost,
                           -cfg.reward_clip, cfg.reward_clip)
         rewards = jnp.asarray(rewards, jnp.float32)

@@ -228,12 +228,27 @@ def ici_cost(graph: LogicalGraph, noc: NoC, assignment=None) -> dict:
             "max_link": m.max_link, "latency": m.latency}
 
 
+def ici_cost_batch(graph: LogicalGraph, noc: NoC, assignments,
+                   backend: str = "auto") -> dict:
+    """Batched :func:`ici_cost`: score a [B, n] population of device orderings
+    in one vectorized :mod:`repro.core.noc_batch` call (pod-scale sweeps)."""
+    from .noc_batch import evaluate_batch
+    m = evaluate_batch(noc, graph, assignments, backend=backend)
+    return {"comm_cost": m.comm_cost, "mean_hops": m.mean_hops,
+            "max_link": m.max_link, "latency": m.latency}
+
+
 def optimize_device_order(graph: LogicalGraph, noc: NoC, method: str = "ppo",
-                          budget: int | None = None, seed: int = 0):
+                          budget: int | None = None, seed: int = 0,
+                          backend: str | None = None, **kw):
     """Paper's optimizer applied to the device graph. Returns (assignment,
-    PlacementResult); ``assignment[logical] = physical core index``."""
+    PlacementResult); ``assignment[logical] = physical core index``.
+
+    ``backend`` selects the candidate-scoring path (see ``optimize_placement``);
+    the batched scorer is what makes 16×16-pod sweeps tractable."""
     from .placement import optimize_placement
-    res = optimize_placement(graph, noc, method=method, budget=budget, seed=seed)
+    res = optimize_placement(graph, noc, method=method, budget=budget, seed=seed,
+                             backend=backend, **kw)
     return res.placement, res
 
 

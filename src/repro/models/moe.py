@@ -152,14 +152,17 @@ def _moe_ep(p, x, cfg: MoEConfig, mesh):
     """
     from jax.sharding import PartitionSpec as P
     try:
-        from jax import shard_map as _shard_map
-        def shard_map(f, **kw):
-            return _shard_map(f, **kw)
+        from jax import shard_map as _sm
     except ImportError:  # pragma: no cover
         from jax.experimental.shard_map import shard_map as _sm
 
-        def shard_map(f, **kw):
-            return _sm(f, **kw)
+    import inspect
+    _sm_params = inspect.signature(_sm).parameters
+
+    def shard_map(f, **kw):
+        if "check_vma" in kw and "check_vma" not in _sm_params:
+            kw["check_rep"] = kw.pop("check_vma")   # pre-0.6 jax spelling
+        return _sm(f, **kw)
 
     import math
     b, s, d = x.shape

@@ -1,7 +1,12 @@
 """Placement methods (paper §4.3/§5): discretization, baselines, PPO."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need the dev extra; plain tests below run regardless
+    from hypothesis import given, settings, strategies as st
+    HAS_HYP = True
+except ImportError:
+    HAS_HYP = False
 
 from repro.core import NoC, random_dag
 from repro.core.placement import (optimize_placement, random_search, sigmate,
@@ -11,19 +16,23 @@ from repro.core.placement.discretize import (actions_to_placement,
                                              resolve_collisions)
 from repro.core.placement.ppo import PPOConfig, run_ppo
 
-
-@given(st.integers(0, 10_000), st.integers(1, 32), st.integers(2, 8),
-       st.integers(2, 8))
-@settings(max_examples=60, deadline=None)
-def test_discretize_always_injective(seed, n, rows, cols):
-    """Any continuous action maps to a valid injective placement (|A|<=|N|)."""
-    if n > rows * cols:
-        n = rows * cols
-    rng = np.random.default_rng(seed)
-    cont = rng.normal(size=(n, 2)) * 2.0
-    placement = actions_to_placement(cont, rows, cols)
-    assert len(set(placement.tolist())) == n
-    assert placement.min() >= 0 and placement.max() < rows * cols
+if HAS_HYP:
+    @given(st.integers(0, 10_000), st.integers(1, 32), st.integers(2, 8),
+           st.integers(2, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_discretize_always_injective(seed, n, rows, cols):
+        """Any continuous action maps to a valid injective placement."""
+        if n > rows * cols:
+            n = rows * cols
+        rng = np.random.default_rng(seed)
+        cont = rng.normal(size=(n, 2)) * 2.0
+        placement = actions_to_placement(cont, rows, cols)
+        assert len(set(placement.tolist())) == n
+        assert placement.min() >= 0 and placement.max() < rows * cols
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_hypothesis_properties():
+        """Placeholder so missing property coverage shows as a skip."""
 
 
 def test_no_collision_identity():
