@@ -58,7 +58,16 @@ def placement_suite(graph, noc, methods=("zigzag", "sigmate", "random_search",
     return rows
 
 
+def bench_time(fn, repeats: int = 1) -> float:
+    """Seconds per call, measured with the monotonic high-resolution clock
+    (time.perf_counter — time.time is wall-clock and can step backwards)."""
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
 def timed(fn, *args, **kw):
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = fn(*args, **kw)
-    return out, (time.time() - t0) * 1e6
+    return out, (time.perf_counter() - t0) * 1e6

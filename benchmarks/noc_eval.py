@@ -19,19 +19,12 @@ import time
 
 import numpy as np
 
-from .common import RESULTS_DIR
+from .common import RESULTS_DIR, bench_time as _time
 from repro.core import NoC, random_dag
 from repro.core import noc_batch
 
 POPS = (1, 16, 64, 256)
 TOPOLOGIES = ((8, 8, False), (16, 16, True))
-
-
-def _time(fn, repeats: int = 1) -> float:
-    t0 = time.time()
-    for _ in range(repeats):
-        fn()
-    return (time.time() - t0) / repeats
 
 
 def noc_eval():
@@ -41,9 +34,9 @@ def noc_eval():
         noc = NoC(R, C, torus=torus)
         n = noc.n_cores
         graph = random_dag(n, p=0.06 if n > 100 else 0.15, seed=0)
-        t0 = time.time()
+        t0 = time.perf_counter()
         bn = noc_batch.batched_noc(noc)
-        build_s = time.time() - t0
+        build_s = time.perf_counter() - t0
         n_edges = len(graph.edges)
         rng = np.random.default_rng(1)
         case = {"rows": R, "cols": C, "torus": torus, "n_edges": n_edges,

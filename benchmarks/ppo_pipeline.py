@@ -1,0 +1,193 @@
+"""Benchmark: the PPO placement pipeline, seed path vs device-resident path.
+
+Times the two pieces this PR fused, at batch {64, 256} on the 8×8 mesh and the
+16×16 torus (the v5e-pod shape), plus end-to-end iterations:
+
+* **rollout generation** (sample -> discretize -> score): the seed per-sample
+  Python spiral (`discretize.actions_to_placement` in a loop) vs the batched
+  resolver (`discretize_batch.actions_to_placement_batch`), both scored with
+  the PR-1 batch scorer;
+* **PPO update**: ``ppo_epochs`` separate ``_ppo_update`` dispatches (seed
+  path) vs the single fused ``_ppo_update_scan`` dispatch;
+* **full iteration**: sample + discretize + score + update, seed vs new.
+
+Actions are sampled from a freshly initialized actor (tanh-bounded means near
+the grid center), so collision pressure matches real early-training rollouts.
+Emits ``results/BENCH_ppo_pipeline.json`` and run.py CSV rows. ``--smoke``
+runs a seconds-scale subset (tiny batch/grid, no JSON) so CI can keep this
+script from bitrotting.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .common import RESULTS_DIR, bench_time
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import NoC, random_dag  # noqa: E402
+from repro.core.noc_batch import evaluate_batch, make_scorer  # noqa: E402
+from repro.core.placement import actor_critic as ac  # noqa: E402
+from repro.core.placement.discretize import actions_to_placement  # noqa: E402
+from repro.core.placement.discretize_batch import (  # noqa: E402
+    actions_to_placement_batch)
+from repro.core.placement.ppo import (  # noqa: E402
+    _ppo_update, _ppo_update_scan)
+from repro.train.optim import AdamWConfig, adamw_init  # noqa: E402
+
+PPO_EPOCHS = 10
+CLIP, ENT = 0.2, 1e-3
+
+
+def _setup(rows: int, cols: int, torus: bool, batch: int, seed: int = 0):
+    noc = NoC(rows, cols, torus=torus)
+    n = noc.n_cores
+    graph = random_dag(n, p=0.06 if n > 100 else 0.15, seed=0)
+    lap = jnp.asarray(graph.laplacian(), jnp.float32)
+    feats = jnp.asarray(graph.node_features(), jnp.float32)
+    actor, critic = ac.init_actor_critic(jax.random.PRNGKey(seed),
+                                         feats.shape[1], 32, 64)
+    mu, log_std = ac.actor_apply(actor, lap, feats)
+    acts, logp_old = ac.sample_actions(jax.random.PRNGKey(seed + 1), mu,
+                                       log_std, batch)
+    score = make_scorer(noc, graph, "batch")
+    return noc, graph, lap, feats, actor, critic, acts, logp_old, score
+
+
+def _bench_case(rows, cols, torus, batch, ppo_epochs, repeats):
+    noc, graph, lap, feats, actor, critic, acts, logp_old, score = _setup(
+        rows, cols, torus, batch)
+    acts_np = np.asarray(acts, np.float64)
+
+    def sample():
+        mu, log_std = ac.actor_apply(actor, lap, feats)
+        a, _ = ac.sample_actions(jax.random.PRNGKey(2), mu, log_std, batch)
+        return np.asarray(a, np.float64)
+
+    # sampling and updates are ms-scale — time them over many more repeats
+    # than the seconds-scale rollouts so dispatch-level deltas beat noise
+    fast_repeats = repeats * 10
+    sample()                                         # compile warm-up
+    sample_s = bench_time(sample, fast_repeats)      # shared by both paths
+
+    def rollout_seed():
+        P = np.stack([actions_to_placement(acts_np[b], noc.rows, noc.cols)
+                      for b in range(batch)])
+        return score(P)
+
+    def rollout_batched():
+        return score(actions_to_placement_batch(acts_np, noc.rows, noc.cols))
+
+    # parity guard reuses one seed-path result — the spiral loop is the
+    # slowest thing here, no extra pass just for the assert
+    assert np.array_equal(rollout_seed(), rollout_batched())
+    seed_s = bench_time(rollout_seed, max(repeats - 1, 1))
+    batched_s = bench_time(rollout_batched, repeats)
+
+    adam = AdamWConfig(lr=5e-3)
+    opt_a, opt_c = adamw_init(actor, adam), adamw_init(critic, adam)
+    rewards = jnp.asarray(np.clip(-np.asarray(rollout_batched()) * 1e-5, -10,
+                                  10), jnp.float32)
+    upd_args = (lap, feats, acts, logp_old, rewards)
+
+    def update_loop():
+        a, c, oa, oc = actor, critic, opt_a, opt_c
+        for _ in range(ppo_epochs):
+            a, c, oa, oc, la, lc = _ppo_update(a, c, oa, oc, *upd_args,
+                                               CLIP, ENT, True, adam, adam)
+        return jax.block_until_ready(la)
+
+    def update_fused():
+        out = _ppo_update_scan(actor, critic, opt_a, opt_c, *upd_args,
+                               ppo_epochs, CLIP, ENT, True, adam, adam)
+        return jax.block_until_ready(out[4])
+
+    update_loop(), update_fused()                    # compile warm-up
+    loop_s = bench_time(update_loop, fast_repeats)
+    fused_s = bench_time(update_fused, fast_repeats)
+
+    iter_seed = sample_s + seed_s + loop_s
+    iter_new = sample_s + batched_s + fused_s
+    return {
+        "rows": rows, "cols": cols, "torus": torus, "batch": batch,
+        "n_edges": len(graph.edges), "ppo_epochs": ppo_epochs,
+        "sample_s": sample_s,
+        "rollout_seed_s": seed_s,
+        "rollout_batched_s": batched_s,
+        "rollout_speedup": seed_s / max(batched_s, 1e-12),
+        "ppo_update_loop_s": loop_s,
+        "ppo_update_fused_s": fused_s,
+        "ppo_update_speedup": loop_s / max(fused_s, 1e-12),
+        "iteration_seed_s": iter_seed,
+        "iteration_new_s": iter_new,
+        "iteration_speedup": iter_seed / max(iter_new, 1e-12),
+    }
+
+
+def _pallas_check():
+    """Tiny pallas-vs-numpy link-traffic parity + timing record (interpret
+    mode on CPU; the kernel targets Mosaic on real TPUs)."""
+    noc = NoC(4, 4, torus=True)
+    graph = random_dag(16, p=0.15, seed=0)
+    rng = np.random.default_rng(0)
+    P = np.stack([rng.permutation(16) for _ in range(4)])
+    m_np = evaluate_batch(noc, graph, P, backend="numpy")
+    m_pl = evaluate_batch(noc, graph, P, backend="pallas")
+    match = bool(np.allclose(m_pl.link_traffic, m_np.link_traffic, rtol=1e-5,
+                             atol=1e-3)
+                 and np.allclose(m_pl.comm_cost, m_np.comm_cost, rtol=1e-5))
+    t = bench_time(lambda: evaluate_batch(noc, graph, P, backend="pallas"),
+                   repeats=3)
+    return {"rows": 4, "cols": 4, "torus": True, "pop": 4,
+            "matches_numpy": match, "pallas_eval_s": t,
+            "mode": "interpret" if jax.default_backend() != "tpu"
+            else "mosaic"}
+
+
+def ppo_pipeline(smoke: bool = False):
+    if smoke:
+        cases = [(4, 4, False, 8)]
+        ppo_epochs, repeats = 2, 1
+    else:
+        cases = [(r, c, t, b) for (r, c, t) in ((8, 8, False), (16, 16, True))
+                 for b in (64, 256)]
+        ppo_epochs, repeats = PPO_EPOCHS, 3
+    record = {"smoke": smoke, "ppo_epochs": ppo_epochs, "cases": [],
+              "pallas": _pallas_check()}
+    if not record["pallas"]["matches_numpy"]:   # fail before the slow sweeps
+        raise RuntimeError("pallas link traffic diverged from numpy backend")
+    rows_out = []
+    for (r, c, t, b) in cases:
+        case = _bench_case(r, c, t, b, ppo_epochs, repeats)
+        record["cases"].append(case)
+        rows_out.append((
+            f"ppo_pipeline.{r}x{c}{'t' if t else ''}.b{b}",
+            case["iteration_seed_s"] * 1e6,
+            f"rollout x{case['rollout_speedup']:.1f} "
+            f"update x{case['ppo_update_speedup']:.1f} "
+            f"iter x{case['iteration_speedup']:.1f}"))
+    p = record["pallas"]
+    rows_out.append(("ppo_pipeline.pallas_check", p["pallas_eval_s"] * 1e6,
+                     f"matches_numpy={p['matches_numpy']} mode={p['mode']}"))
+    if not smoke:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        out = os.path.join(RESULTS_DIR, "BENCH_ppo_pipeline.json")
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        rows_out.append(("ppo_pipeline.json", 0.0,
+                         f"wrote {os.path.relpath(out)}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI (no JSON output)")
+    args = ap.parse_args()
+    for name, us, derived in ppo_pipeline(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")

@@ -23,7 +23,12 @@ tables, batched over a population axis:
   while scoring whole populations per call;
 * **jax backend** — ``jax.jit`` + ``jax.vmap`` (float32 unless x64 is enabled),
   an explicit opt-in for accelerator hosts and large populations
-  (``backend="auto"`` picks numpy: exact, and faster on CPU-only hosts).
+  (``backend="auto"`` picks numpy: exact, and faster on CPU-only hosts);
+* **pallas backend** — the jax path with per-link traffic computed by the
+  tiled one-hot-matmul segment-sum kernel ``repro.kernels.noc_segsum``
+  (interpret mode on CPU, Mosaic on TPU). Link/core traffic accumulates in
+  float32 (the MXU's accumulation dtype) even when jax x64 is enabled —
+  use the numpy or jax backend when float64 traffic totals matter.
 
 Entry points: :func:`evaluate_batch`, :func:`comm_cost_batch`,
 :func:`directional_cdv_batch`, and :func:`make_scorer` (the comm-cost-only
@@ -214,17 +219,17 @@ class BatchedNoC:
             return "numpy"
         if backend in ("numpy", "batch"):
             return "numpy"
-        if backend == "jax":
+        if backend in ("jax", "pallas"):
             if not HAS_JAX:
-                raise RuntimeError("backend='jax' requested but jax is not "
-                                   "importable; use 'numpy' or 'auto'")
-            return "jax"
+                raise RuntimeError(f"backend={backend!r} requested but jax is "
+                                   "not importable; use 'numpy' or 'auto'")
+            return backend
         if backend == "reference":
             raise ValueError("backend='reference' is the sequential "
                              "NoC.evaluate loop; call noc.evaluate directly or "
                              "use make_scorer(noc, graph, 'reference')")
         raise ValueError(f"unknown backend {backend!r}; "
-                         "choose 'auto' | 'jax' | 'numpy' | 'batch'")
+                         "choose 'auto' | 'jax' | 'pallas' | 'numpy' | 'batch'")
 
     # ---- comm cost only (the optimizer scoring path) -----------------------
     def comm_cost(self, graph: LogicalGraph, placements,
@@ -233,7 +238,8 @@ class BatchedNoC:
         P = self._placements(placements, graph.n, validate)
         if src.size == 0 or P.shape[0] == 0:
             return np.zeros(P.shape[0])
-        if self._resolve(backend) == "jax":
+        if self._resolve(backend) in ("jax", "pallas"):
+            # comm_cost is gather-only (no segment-sum); pallas == jax here
             f = self._get_jax_fn("comm")
             return np.asarray(f(jnp.asarray(P), jnp.asarray(src),
                                 jnp.asarray(dst),
@@ -261,8 +267,10 @@ class BatchedNoC:
                                     np.inf),
                 core_traffic=np.zeros((B, t.rows, t.cols)),
                 link_traffic=np.zeros((B, t.n_links)))
-        if self._resolve(backend) == "jax":
-            f = self._get_jax_fn("full")
+        resolved = self._resolve(backend)
+        if resolved in ("jax", "pallas"):
+            f = self._get_jax_fn("full_pallas" if resolved == "pallas"
+                                 else "full")
             cc, h_max, lt, core_tr, per_core_max = f(
                 jnp.asarray(P), jnp.asarray(src), jnp.asarray(dst),
                 jnp.asarray(vol, _jx_float()),
@@ -356,6 +364,33 @@ class BatchedNoC:
             def fn(P, src, dst, vol):
                 h = hops[P[:, src], P[:, dst]]               # [B, E]
                 return (h.astype(vol.dtype) * vol[None, :]).sum(axis=1)
+        elif kind == "full_pallas":
+            from ..kernels.noc_segsum import link_traffic_pallas
+            interpret = jax.default_backend() != "tpu"
+            # dense [n_links, n] one-hot of link_dst: core traffic becomes a
+            # matmul on the kernel's output instead of a second scatter
+            dst_oh = np.zeros((n_links, n), np.float32)
+            dst_oh[np.arange(n_links), t.link_dst] = 1.0
+            dst_oh = jnp.asarray(dst_oh)
+            inv_bw = 1.0 / self.noc.link_bw
+
+            @jax.jit
+            def fn(P, src, dst, vol, comp_nodes):
+                s, d = P[:, src], P[:, dst]                  # [B, E]
+                h = hops[s, d]
+                cc = (h.astype(vol.dtype) * vol[None, :]).sum(axis=1)
+                ids = flat_routes[s * n + d]                 # [B, E, max_hops]
+                B = ids.shape[0]
+                w = jnp.broadcast_to(vol[None, :, None], ids.shape)
+                lt = link_traffic_pallas(ids.reshape(B, -1),
+                                         w.reshape(B, -1).astype(jnp.float32),
+                                         n_links,
+                                         interpret=interpret).astype(vol.dtype)
+                core_tr = lt @ dst_oh.astype(vol.dtype)      # [B, n]
+                comp = jnp.zeros((B, n), vol.dtype).at[
+                    jnp.arange(B)[:, None], P].set(comp_nodes[None, :])
+                per_core_max = (comp + core_tr * inv_bw).max(axis=1)
+                return cc, h.max(axis=1), lt, core_tr, per_core_max
         else:
             def one(p, src, dst, vol, comp_nodes):
                 s, d = p[src], p[dst]
@@ -420,9 +455,12 @@ def validate_placements(noc: NoC, placements, n_nodes: int) -> np.ndarray:
 
 # Backends accepted by optimizers: "batch" (vectorized numpy float64 — exact
 # parity with the reference loop on integer-volume graphs), "jax" (jit+vmap,
-# explicit opt-in), "auto" (currently the numpy path; see _resolve),
-# "reference" (original Python loop).
-SCORER_BACKENDS = ("batch", "numpy", "jax", "auto", "reference")
+# explicit opt-in), "pallas" (jax path with the tiled segment-sum kernel of
+# kernels/noc_segsum for link traffic; interpret mode on CPU, Mosaic on TPU —
+# comm-cost-only scoring has no segment-sum, so it shares the jax gather),
+# "auto" (currently the numpy path; see _resolve), "reference" (original
+# Python loop).
+SCORER_BACKENDS = ("batch", "numpy", "jax", "pallas", "auto", "reference")
 
 
 def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch"):
@@ -450,7 +488,7 @@ def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch"):
     # construction, and callers feeding user input (e.g. SA's ``init``) must
     # validate it once up front (see validate_placements).
     src, dst, vol, _ = b.edge_arrays(graph)
-    if b._resolve(backend) == "jax":
+    if b._resolve(backend) in ("jax", "pallas"):
         f = b._get_jax_fn("comm")
         jsrc, jdst = jnp.asarray(src), jnp.asarray(dst)
         jvol = jnp.asarray(vol, _jx_float())

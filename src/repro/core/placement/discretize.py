@@ -15,12 +15,18 @@ import numpy as np
 
 def continuous_to_grid(cont: np.ndarray, rows: int, cols: int,
                        clip: float = 1.0) -> np.ndarray:
-    """[n, 2] continuous -> [n, 2] int grid coords (no collision handling)."""
+    """[..., 2] continuous -> [..., 2] int grid coords (no collision handling).
+
+    Leading axes pass through, so this is also the batched binning used by
+    ``discretize_batch`` (one formula — the bit-exactness contract between the
+    sequential and batched paths hangs on it).
+    """
     cont = np.clip(np.asarray(cont, dtype=np.float64), -clip, clip)
     # equidistant bins over [-clip, clip]
-    r = np.floor((cont[:, 0] + clip) / (2 * clip) * rows).astype(int)
-    c = np.floor((cont[:, 1] + clip) / (2 * clip) * cols).astype(int)
-    return np.stack([np.clip(r, 0, rows - 1), np.clip(c, 0, cols - 1)], axis=1)
+    r = np.floor((cont[..., 0] + clip) / (2 * clip) * rows).astype(int)
+    c = np.floor((cont[..., 1] + clip) / (2 * clip) * cols).astype(int)
+    return np.stack([np.clip(r, 0, rows - 1), np.clip(c, 0, cols - 1)],
+                    axis=-1)
 
 
 def _clockwise_ring(r0: int, c0: int, dist: int):

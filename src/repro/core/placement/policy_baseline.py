@@ -30,7 +30,7 @@ class PolicyConfig:
     d_hidden: int = 64
     baseline_decay: float = 0.9
     seed: int = 0
-    backend: str = "batch"      # candidate scoring: "batch"|"jax"|"reference"
+    backend: str = "batch"      # candidate scoring: "batch"|"jax"|"pallas"|"reference"
 
 
 def policy_specs(d_feat: int, n_cores: int, d_hidden: int):
@@ -102,7 +102,8 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
     key = jax.random.PRNGKey(cfg.seed)
     feats = jnp.asarray(graph.node_features(), jnp.float32)
     params = materialize(key, policy_specs(feats.shape[1], noc.n_cores, cfg.d_hidden))
-    opt = adamw_init(params, AdamWConfig(lr=cfg.lr))
+    adam = AdamWConfig(lr=cfg.lr)     # hoisted: static jit arg, one instance
+    opt = adamw_init(params, adam)
     score = make_scorer(noc, graph, cfg.backend)
     baseline = None
     best_cost, best_placement = np.inf, None
@@ -121,7 +122,7 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
             cfg.baseline_decay * baseline + (1 - cfg.baseline_decay) * rewards.mean()
         adv = jnp.asarray((rewards - baseline) / (rewards.std() + 1e-8), jnp.float32)
         params, opt, l = _reinforce_update(params, opt, feats, placements, adv,
-                                           AdamWConfig(lr=cfg.lr))
+                                           adam)
         history.append({"iter": it, "mean_cost": float(costs.mean()),
                         "best_cost": best_cost, "loss": float(l)})
     return {"best_cost": best_cost, "best_placement": best_placement,

@@ -8,6 +8,12 @@ the Zigzag baseline, and reward clipping to [-10, 10] (paper's setting).
 Paper hyperparameters (§5.1): gcn feature size 32, batch 256, lr 0.005,
 ppo_epochs 10, clip 0.1–0.5, reward clip [-10, 10]. Defaults below mirror them but are
 all overridable; tests use smaller batches.
+
+The pipeline is batched end-to-end: rollouts are discretized by the vectorized
+resolver (`discretize_batch`, bit-exact vs the sequential spiral), scored in one
+`noc_batch` call, and all ``ppo_epochs`` inner epochs run as a single jitted
+``lax.scan`` dispatch (`_ppo_update_scan`) with rollout tensors device-resident.
+Benchmarked in ``benchmarks/ppo_pipeline.py``.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ import numpy as np
 from ...train.optim import AdamWConfig, adamw_init, adamw_update
 from ..noc_batch import make_scorer
 from . import actor_critic as ac
-from .discretize import actions_to_placement
+from .discretize_batch import actions_to_placement_batch
 
 
 @dataclasses.dataclass
@@ -38,7 +44,7 @@ class PPOConfig:
     freeze_gcn: bool = True     # paper: GCN pre-trained, not updated by PPO
     action_clip: float = 1.0
     seed: int = 0
-    backend: str = "batch"      # rollout scoring: "batch"|"jax"|"reference"
+    backend: str = "batch"      # rollout scoring: "batch"|"jax"|"pallas"|"reference"
 
 
 def _freeze_gcn_grads(grads):
@@ -47,12 +53,9 @@ def _freeze_gcn_grads(grads):
     return g
 
 
-@partial(jax.jit, static_argnames=("cfg_clip", "cfg_ent", "freeze_gcn",
-                                   "adam_a", "adam_c"))
-def _ppo_update(actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
-                cfg_clip: float, cfg_ent: float, freeze_gcn: bool,
-                adam_a: AdamWConfig = AdamWConfig(lr=5e-3),
-                adam_c: AdamWConfig = AdamWConfig(lr=5e-3)):
+def _ppo_epoch(actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
+               cfg_clip: float, cfg_ent: float, freeze_gcn: bool,
+               adam_a: AdamWConfig, adam_c: AdamWConfig):
     value = ac.critic_apply(critic, lap, feats)
     adv = rewards - value
     adv = (adv - adv.mean()) / (adv.std() + 1e-8)
@@ -78,6 +81,37 @@ def _ppo_update(actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards
     actor, opt_a = adamw_update(ga, opt_a, actor, adam_a)
     critic, opt_c = adamw_update(gc, opt_c, critic, adam_c)
     return actor, critic, opt_a, opt_c, la, lc
+
+
+# Single-epoch jit (the seed-era update path; kept for benchmarks and as the
+# reference the fused loop is validated against).
+_ppo_update = partial(jax.jit, static_argnames=(
+    "cfg_clip", "cfg_ent", "freeze_gcn", "adam_a", "adam_c"))(_ppo_epoch)
+
+
+@partial(jax.jit, static_argnames=("n_epochs", "cfg_clip", "cfg_ent",
+                                   "freeze_gcn", "adam_a", "adam_c"))
+def _ppo_update_scan(actor, critic, opt_a, opt_c, lap, feats, acts, logp_old,
+                     rewards, n_epochs: int, cfg_clip: float, cfg_ent: float,
+                     freeze_gcn: bool, adam_a: AdamWConfig,
+                     adam_c: AdamWConfig):
+    """All ``ppo_epochs`` inner epochs fused into one jitted ``lax.scan`` —
+    one dispatch per PPO iteration instead of ``ppo_epochs`` host round-trips.
+    Per-epoch math is exactly :func:`_ppo_epoch`."""
+
+    def body(carry, _):
+        actor, critic, opt_a, opt_c = carry
+        actor, critic, opt_a, opt_c, la, lc = _ppo_epoch(
+            actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
+            cfg_clip, cfg_ent, freeze_gcn, adam_a, adam_c)
+        return (actor, critic, opt_a, opt_c), (la, lc)
+
+    # rolled scan (unroll=1): unrolling is ~1.25x faster on CPU but lets XLA
+    # fuse across epochs, perturbing last-ulp floats and breaking seed-for-seed
+    # trajectory parity with the pre-fusion epoch loop — parity wins
+    (actor, critic, opt_a, opt_c), (las, lcs) = jax.lax.scan(
+        body, (actor, critic, opt_a, opt_c), None, length=n_epochs)
+    return actor, critic, opt_a, opt_c, las[-1], lcs[-1]
 
 
 @dataclasses.dataclass
@@ -114,10 +148,8 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
         mu, log_std = ac.actor_apply(actor, lap, feats)
         acts, logp_old = ac.sample_actions(k_s, mu, log_std, cfg.batch_size)
         acts_np = np.asarray(acts, np.float64)
-        placements = np.stack([
-            actions_to_placement(acts_np[b], noc.rows, noc.cols,
-                                 cfg.action_clip, priority)
-            for b in range(cfg.batch_size)])
+        placements = actions_to_placement_batch(
+            acts_np, noc.rows, noc.cols, cfg.action_clip, priority)
         costs = score(placements)        # whole rollout batch in one call
         b_min = int(costs.argmin())
         if costs[b_min] < best_cost:
@@ -125,15 +157,16 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
         rewards = np.clip(cfg.reward_clip * (baseline_cost - costs) / baseline_cost,
                           -cfg.reward_clip, cfg.reward_clip)
         rewards = jnp.asarray(rewards, jnp.float32)
-        for _ in range(cfg.ppo_epochs):
-            actor, critic, opt_a, opt_c, la, lc = _ppo_update(
-                actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
-                cfg.clip, cfg.entropy_coef, cfg.freeze_gcn,
-                AdamWConfig(lr=cfg.lr), AdamWConfig(lr=cfg.lr))
+        # acts/logp_old/rewards stay device-resident; all ppo_epochs run in
+        # one fused dispatch (lax.scan) instead of ppo_epochs round-trips.
+        actor, critic, opt_a, opt_c, la, lc = _ppo_update_scan(
+            actor, critic, opt_a, opt_c, lap, feats, acts, logp_old, rewards,
+            cfg.ppo_epochs, cfg.clip, cfg.entropy_coef, cfg.freeze_gcn,
+            adam, adam)
         history.append({
             "iter": it,
             "mean_cost": float(costs.mean()),
-            "min_cost": float(costs.min()),
+            "min_cost": float(costs[b_min]),
             "best_cost": float(best_cost),
             "actor_loss": float(la),
             "critic_loss": float(lc),

@@ -1,1 +1,1 @@
-from . import ops, ref  # noqa: F401
+from . import noc_segsum, ops, ref  # noqa: F401

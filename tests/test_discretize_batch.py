@@ -1,0 +1,145 @@
+"""Batched discretizer (discretize_batch) vs the sequential spiral reference.
+
+The contract is *bit-exactness*: identical placements for identical actions and
+priority order, so PPO trajectories are seed-for-seed unchanged by the batched
+path. Deterministic sweeps run unconditionally; a hypothesis property test
+rides along when the dev extra is installed (guarded per-test like the others).
+"""
+import numpy as np
+import pytest
+
+try:  # property tests need the dev extra; plain tests below run regardless
+    from hypothesis import given, settings, strategies as st
+    HAS_HYP = True
+except ImportError:
+    HAS_HYP = False
+
+from repro.core.placement.discretize import (actions_to_placement,
+                                             continuous_to_grid)
+from repro.core.placement.discretize_batch import (actions_to_placement_batch,
+                                                   continuous_to_grid_batch,
+                                                   make_jax_resolver,
+                                                   resolve_collisions_batch,
+                                                   scan_table)
+
+# mesh-ish and odd shapes; (rows, cols, n_nodes)
+SHAPES = [(4, 4, 16), (4, 4, 9), (3, 5, 15), (5, 3, 7), (8, 8, 64),
+          (16, 16, 200), (7, 7, 49), (2, 9, 11)]
+
+
+def _sequential(cont, rows, cols, clip=1.0, priority=None):
+    return np.stack([actions_to_placement(cont[b], rows, cols, clip, priority)
+                     for b in range(cont.shape[0])])
+
+
+@pytest.mark.parametrize("rows,cols,n", SHAPES)
+def test_batch_matches_sequential(rows, cols, n):
+    rng = np.random.default_rng(rows * 100 + cols * 10 + n)
+    cont = rng.normal(size=(13, n, 2)) * 1.5
+    out = actions_to_placement_batch(cont, rows, cols)
+    assert np.array_equal(out, _sequential(cont, rows, cols))
+    # injectivity and range, per sample
+    assert all(np.unique(p).size == n for p in out)
+    assert out.min() >= 0 and out.max() < rows * cols
+
+
+@pytest.mark.parametrize("rows,cols,n", [(4, 4, 16), (3, 5, 12), (5, 5, 25)])
+def test_batch_matches_sequential_custom_priority(rows, cols, n):
+    rng = np.random.default_rng(7)
+    cont = rng.normal(size=(9, n, 2))
+    prio = rng.permutation(n)
+    out = actions_to_placement_batch(cont, rows, cols, priority=prio)
+    assert np.array_equal(out, _sequential(cont, rows, cols, priority=prio))
+
+
+def test_all_nodes_collide():
+    """Adversarial: every node bins to the same cell -> pure spiral fill."""
+    for rows, cols in [(4, 4), (3, 5), (5, 5)]:
+        n = rows * cols
+        cont = np.zeros((6, n, 2))                      # all map to one cell
+        out = actions_to_placement_batch(cont, rows, cols)
+        assert np.array_equal(out, _sequential(cont, rows, cols))
+        assert all(np.unique(p).size == n for p in out)
+
+
+def test_grid_binning_matches_reference():
+    rng = np.random.default_rng(0)
+    cont = rng.normal(size=(5, 11, 2)) * 2.0
+    cells = continuous_to_grid_batch(cont, 4, 6, clip=1.0)
+    for b in range(5):
+        g = continuous_to_grid(cont[b], 4, 6, clip=1.0)
+        assert np.array_equal(cells[b], g[:, 0] * 6 + g[:, 1])
+
+
+def test_scan_table_rows_are_permutations():
+    for rows, cols in [(4, 4), (3, 5), (2, 7)]:
+        t = scan_table(rows, cols)
+        n = rows * cols
+        assert t.shape == (n, n)
+        for s in range(n):
+            assert t[s, 0] == s                         # own cell first
+            assert np.array_equal(np.sort(t[s]), np.arange(n))
+
+
+def test_single_sample_2d_input():
+    rng = np.random.default_rng(3)
+    cont = rng.normal(size=(10, 2))
+    out = actions_to_placement_batch(cont, 4, 4)
+    assert out.shape == (10,)
+    assert np.array_equal(out, actions_to_placement(cont, 4, 4))
+
+
+def test_too_many_nodes_raises():
+    with pytest.raises(ValueError):
+        resolve_collisions_batch(np.zeros((2, 5), int), 2, 2)
+    with pytest.raises(ValueError):
+        make_jax_resolver(2, 2)(np.zeros((2, 5), np.int32))
+
+
+def test_partial_priority_leaves_minus_one():
+    """Nodes a partial priority order never visits come back -1, like the
+    sequential reference."""
+    from repro.core.placement.discretize import resolve_collisions
+    rng = np.random.default_rng(5)
+    cont = rng.normal(size=(4, 6, 2))
+    prio = np.array([0, 3, 5])                      # nodes 1, 2, 4 unvisited
+    out = actions_to_placement_batch(cont, 4, 4, priority=prio)
+    for b in range(4):
+        want = resolve_collisions(
+            np.stack(np.divmod(continuous_to_grid_batch(cont[b], 4, 4), 4),
+                     axis=1), 4, 4, priority=prio)
+        assert np.array_equal(out[b], want)
+    assert np.array_equal(np.unique(out[:, [1, 2, 4]]), [-1])
+
+
+def test_jax_resolver_matches_numpy():
+    jnp = pytest.importorskip("jax.numpy")  # noqa: F841
+    rng = np.random.default_rng(11)
+    for rows, cols, n in [(4, 4, 16), (3, 5, 12)]:
+        cont = rng.normal(size=(8, n, 2))
+        prio = rng.permutation(n)
+        cells = continuous_to_grid_batch(cont, rows, cols)
+        partial = prio[: n // 2]                    # unvisited nodes stay -1
+        for p in (None, prio, partial):
+            got = np.asarray(make_jax_resolver(rows, cols, p)(cells))
+            want = resolve_collisions_batch(cells, rows, cols, p)
+            assert np.array_equal(got, want)
+
+
+if HAS_HYP:
+    @given(st.integers(0, 10_000), st.integers(1, 32), st.integers(2, 8),
+           st.integers(2, 8), st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_property_batch_equals_sequential(seed, n, rows, cols, use_prio):
+        if n > rows * cols:
+            n = rows * cols
+        rng = np.random.default_rng(seed)
+        cont = rng.normal(size=(4, n, 2)) * 2.0
+        prio = rng.permutation(n) if use_prio else None
+        out = actions_to_placement_batch(cont, rows, cols, priority=prio)
+        assert np.array_equal(out, _sequential(cont, rows, cols,
+                                               priority=prio))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_hypothesis_properties():
+        """Placeholder so missing property coverage shows as a skip."""

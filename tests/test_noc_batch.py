@@ -71,6 +71,33 @@ def test_jax_backend_matches_numpy(rows, cols, torus):
                        m_np.comm_cost, rtol=1e-5)
 
 
+@pytest.mark.skipif(not HAS_JAX, reason="jax not importable")
+@pytest.mark.parametrize("rows,cols,torus", [(4, 4, False), (4, 4, True),
+                                             (3, 5, True)])
+def test_pallas_backend_matches_numpy(rows, cols, torus):
+    """backend='pallas' (noc_segsum link-traffic kernel, interpret mode on
+    CPU) reproduces the numpy backend within float32 tolerance."""
+    noc = NoC(rows, cols, torus=torus)
+    n = noc.n_cores - 1
+    g = _int_graph(n, seed=7)
+    P = _placements(np.random.default_rng(1), n, noc.n_cores, 4)
+    m_np = evaluate_batch(noc, g, P, backend="numpy")
+    m_pl = evaluate_batch(noc, g, P, backend="pallas")
+    assert np.allclose(m_pl.comm_cost, m_np.comm_cost, rtol=1e-5)
+    assert np.allclose(m_pl.link_traffic, m_np.link_traffic, rtol=1e-5,
+                       atol=1e-3)
+    assert np.allclose(m_pl.max_link, m_np.max_link, rtol=1e-5)
+    assert np.allclose(m_pl.core_traffic, m_np.core_traffic, rtol=1e-5,
+                       atol=1e-3)
+    assert np.allclose(m_pl.latency, m_np.latency, rtol=1e-5)
+    assert np.array_equal(m_pl.max_hops, m_np.max_hops)
+    cdv_np = directional_cdv_batch(noc, g, P, backend="numpy")
+    cdv_pl = directional_cdv_batch(noc, g, P, backend="pallas")
+    assert np.allclose(cdv_pl, cdv_np, rtol=1e-5, atol=1e-3)
+    assert np.allclose(make_scorer(noc, g, "pallas")(P), m_np.comm_cost,
+                       rtol=1e-5)
+
+
 def test_scorer_backends_agree():
     noc = NoC(4, 4)
     g = _int_graph(12, seed=5)

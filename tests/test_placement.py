@@ -104,6 +104,49 @@ def test_ppo_freeze_gcn_keeps_gcn_params():
     assert not jnp.allclose(st_.actor["fc1_w"], actor0["fc1_w"])
 
 
+def test_ppo_fused_scan_matches_epoch_loop():
+    """_ppo_update_scan (one dispatch) == ppo_epochs separate _ppo_update
+    dispatches — the fused loop must not change the training math."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.placement import actor_critic as ac
+    from repro.core.placement.ppo import _ppo_update, _ppo_update_scan
+    from repro.train.optim import AdamWConfig, adamw_init
+
+    g = random_dag(10, seed=4)
+    lap = jnp.asarray(g.laplacian(), jnp.float32)
+    feats = jnp.asarray(g.node_features(), jnp.float32)
+    actor, critic = ac.init_actor_critic(jax.random.PRNGKey(0),
+                                         feats.shape[1], 32, 64)
+    adam = AdamWConfig(lr=5e-3)
+    opt_a, opt_c = adamw_init(actor, adam), adamw_init(critic, adam)
+    mu, log_std = ac.actor_apply(actor, lap, feats)
+    acts, logp = ac.sample_actions(jax.random.PRNGKey(1), mu, log_std, 12)
+    rewards = jnp.linspace(-1.0, 1.0, 12)
+
+    a1, c1, oa1, oc1 = actor, critic, opt_a, opt_c
+    for _ in range(4):
+        a1, c1, oa1, oc1, la1, lc1 = _ppo_update(
+            a1, c1, oa1, oc1, lap, feats, acts, logp, rewards,
+            0.2, 1e-3, True, adam, adam)
+    a2, c2, oa2, oc2, la2, lc2 = _ppo_update_scan(
+        actor, critic, opt_a, opt_c, lap, feats, acts, logp, rewards,
+        4, 0.2, 1e-3, True, adam, adam)
+    # full pytrees: params AND optimizer moments (run_ppo threads all four
+    # across iterations, so a swapped carry slot must fail here). Bitwise:
+    # the rolled scan keeps seed-for-seed trajectories, so any last-ulp
+    # drift (e.g. from unroll>1 re-fusing epochs) is exactly the regression
+    # this test must catch.
+    for t1, t2 in ((a1, a2), (c1, c2), (oa1, oa2), (oc1, oc2)):
+        l1 = jax.tree_util.tree_leaves(t1)
+        l2 = jax.tree_util.tree_leaves(t2)
+        assert len(l1) == len(l2)
+        for x, y in zip(l1, l2):
+            assert jnp.array_equal(x, y), (x, y)
+    assert jnp.array_equal(la1, la2)
+    assert jnp.array_equal(lc1, lc2)
+
+
 def test_random_search_monotone_in_budget():
     g = random_dag(10, seed=9)
     noc = NoC(4, 4)
