@@ -1,0 +1,114 @@
+"""Benchmark: the end-to-end deployment engine (`repro.deploy`).
+
+Runs ``deploy_model`` — profile -> partition -> place -> schedule — for the
+paper's models on the 32-core grid, across placement methods and objectives,
+and records per-stage wall times plus the deployed metrics. Also measures the
+multi-objective payoff: simulated annealing under the ``max_link`` objective
+vs the comm-cost optimum (hotspot peak reduction), and an energy-weighted
+combo. Emits ``results/BENCH_deploy_e2e.json`` and run.py CSV rows;
+``--smoke`` runs a seconds-scale subset (no JSON) for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .common import RESULTS_DIR, SPIKE_MODELS, make_noc
+
+from repro.core.placement.ppo import PPOConfig  # noqa: E402
+from repro.deploy import deploy_model  # noqa: E402
+
+ENERGY_COMBO = {"comm_cost": 1.0, "energy": 2e9}
+
+
+def _case(model_name, model_cfg, noc, method, objective, budget=None, **kw):
+    # **kw may itself carry a cfg= (e.g. a PPOConfig) for optimize_placement
+    plan = deploy_model(model_cfg, noc, method=method, objective=objective,
+                        schedule="fpdeep", n_units=8, budget=budget, **kw)
+    rep = plan.report()
+    rep["model"] = model_name
+    total = sum(rep["stage_times_s"].values())
+    rep["total_s"] = total
+    return plan, rep
+
+
+def deploy_e2e(smoke: bool = False):
+    if smoke:
+        models = ["S-ResNet18"]
+        methods = [("zigzag", {}), ("random_search", {"budget": 64})]
+        sa_budget = 200
+    else:
+        models = ["S-VGG16", "S-ResNet18"]
+        methods = [
+            ("zigzag", {}),
+            ("sigmate", {}),
+            ("random_search", {"budget": 1500}),
+            ("simulated_annealing", {"budget": 4000}),
+            ("ppo", {"cfg": PPOConfig(batch_size=48, iterations=15,
+                                      ppo_epochs=4, seed=0)}),
+        ]
+        sa_budget = 4000
+    noc = make_noc(32)
+
+    record = {"smoke": smoke, "cases": [], "objective_demo": {}}
+    rows_out = []
+    for model_name in models:
+        cfg = SPIKE_MODELS[model_name]()
+        for method, kw in methods:
+            _, rep = _case(model_name, cfg, noc, method, "comm_cost", **kw)
+            record["cases"].append(rep)
+            st = rep["stage_times_s"]
+            rows_out.append((
+                f"deploy_e2e.{model_name}.{method}",
+                rep["total_s"] * 1e6,
+                f"comm={rep['placement']['comm_cost']:.3e} "
+                f"profile={st['profile']*1e3:.1f}ms "
+                f"partition={st['partition']*1e3:.1f}ms "
+                f"place={st['place']:.2f}s "
+                f"schedule={st['schedule']*1e3:.1f}ms"))
+
+    # ---- multi-objective payoff (paper Fig 7 hotspot story) -------------
+    # same searcher + budget + seed, three objectives; the hotspot-aware
+    # optimum must flatten the peak link the comm-cost optimum leaves hot
+    demo_model = models[0]
+    cfg = SPIKE_MODELS[demo_model]()
+    by_obj = {}
+    for objective in ("comm_cost", "max_link", ENERGY_COMBO):
+        plan, rep = _case(demo_model, cfg, noc, "simulated_annealing",
+                          objective, budget=sa_budget)
+        key = rep["placement"]["objective"]
+        by_obj[key] = (plan, rep)
+        record["objective_demo"][key] = rep["placement"]
+    comm = by_obj["comm_cost"][1]["placement"]
+    ml = by_obj["max_link"][1]["placement"]
+    reduction = comm["max_link"] / max(ml["max_link"], 1e-30)
+    placements_differ = not np.array_equal(
+        by_obj["comm_cost"][0].placement.placement,
+        by_obj["max_link"][0].placement.placement)
+    record["objective_demo"]["hotspot_peak_reduction"] = reduction
+    record["objective_demo"]["placements_differ"] = placements_differ
+    rows_out.append((
+        f"deploy_e2e.objective_demo.{demo_model}", 0.0,
+        f"max_link obj cuts peak link x{reduction:.2f} vs comm optimum "
+        f"(placements_differ={placements_differ})"))
+
+    if not smoke:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        out = os.path.join(RESULTS_DIR, "BENCH_deploy_e2e.json")
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        rows_out.append(("deploy_e2e.json", 0.0,
+                         f"wrote {os.path.relpath(out)}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI (no JSON output)")
+    args = ap.parse_args()
+    for name, us, derived in deploy_e2e(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")

@@ -6,11 +6,7 @@ distributed train step (single device here; the same step jits onto any mesh)
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-import sys
 import tempfile
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

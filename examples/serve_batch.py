@@ -4,11 +4,7 @@ long_500k dry-run shapes lower.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

@@ -1,28 +1,23 @@
-"""Train a Spike-ResNet18 with BPTT and deploy it with the paper's pipeline:
+"""Train a Spike-ResNet18 with BPTT and deploy it with the paper's pipeline,
+now one engine call: ``deploy_model`` chains profile -> partition -> place ->
+schedule (paper §4.2/§4.3).
 
 1. BPTT-train a reduced Spike-ResNet18 on a synthetic event-frame task,
-2. profile its layers (compute + storage, spike-aware),
-3. partition with the balanced compute+storage strategy (paper §4.2),
-4. optimize the logical->physical 32-core placement with PPO (paper §4.3),
-5. report comm-cost vs Zigzag/Sigmate and the FPDeep pipelining speedup.
+2. deploy the full-size model onto a 32-core NoC: spike-aware profiling,
+   balanced compute+storage partitioning, PPO placement, FPDeep pipelining,
+3. report comm-cost vs Zigzag/Sigmate and the FPDeep pipelining speedup.
 
     PYTHONPATH=src python examples/snn_train.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import NoC, partition_model, pipeline
-from repro.core.placement import optimize_placement
+from repro.core import NoC, pipeline
 from repro.core.placement.ppo import PPOConfig
+from repro.deploy import deploy_model
 from repro.models.specs import materialize, n_params
-from repro.snn import model_specs, profile_model, spike_resnet18
-from repro.snn.bptt import BPTTConfig, make_optimizer, train_step
+from repro.snn import model_specs, spike_resnet18
+from repro.snn.bptt import make_optimizer, train_step
 
 
 def synthetic_events(key, n, res=16):
@@ -51,23 +46,25 @@ def main():
 
     # ---- deployment (full-size profile, as the compiler would see it) ----
     full = spike_resnet18(n_classes=10, in_res=32, T=4)
-    prof = profile_model(full, batch=8)
-    part = partition_model(prof, 32, "balanced")
-    graph = part.to_graph()
     noc = NoC(4, 8, link_bw=8e9, core_flops=25.6e9)
-    print(f"\npartition: {part.n} logical cores, "
-          f"imbalance={part.imbalance():.3f}")
     for method in ("zigzag", "sigmate"):
-        r = optimize_placement(graph, noc, method=method)
+        plan = deploy_model(full, noc, method=method, schedule="none")
+        r = plan.placement
         print(f"{method:10s} comm={r.comm_cost:.3e} hops={r.mean_hops:.2f}")
-    r = optimize_placement(graph, noc, method="ppo",
-                           cfg=PPOConfig(batch_size=32, iterations=12,
-                                         ppo_epochs=4))
+    plan = deploy_model(full, noc, method="ppo",
+                        cfg=PPOConfig(batch_size=32, iterations=12,
+                                      ppo_epochs=4),
+                        schedule="fpdeep", n_units=8)
+    r = plan.placement
     print(f"{'ppo':10s} comm={r.comm_cost:.3e} hops={r.mean_hops:.2f}")
+    print(f"\npartition: {plan.partition.n} logical cores, "
+          f"imbalance={plan.partition.imbalance():.3f}")
+    print("stage times:", {k: f"{v:.2f}s"
+                           for k, v in plan.stage_times_s.items()})
 
-    times = [s.latency(part.core) for s in part.slices]
-    lw = pipeline.layerwise(times, 8)
-    fp = pipeline.fpdeep(times, 8)
+    fp = plan.schedule
+    times = [s.latency(plan.partition.core) for s in plan.partition.slices]
+    lw = pipeline.layerwise(times, plan.n_units)
     print(f"\npipelining: layerwise {lw.makespan*1e3:.2f}ms "
           f"(util {lw.mean_utilization():.2f}) -> fpdeep "
           f"{fp.makespan*1e3:.2f}ms (util {fp.mean_utilization():.2f}), "

@@ -31,8 +31,9 @@ tables, batched over a population axis:
   use the numpy or jax backend when float64 traffic totals matter.
 
 Entry points: :func:`evaluate_batch`, :func:`comm_cost_batch`,
-:func:`directional_cdv_batch`, and :func:`make_scorer` (the comm-cost-only
-closure the optimizers use).
+:func:`directional_cdv_batch`, and :func:`make_scorer` (the scoring closure
+the optimizers use — comm-cost by default, any :mod:`repro.deploy.objective`
+spec via ``objective=``).
 """
 from __future__ import annotations
 
@@ -463,8 +464,9 @@ def validate_placements(noc: NoC, placements, n_nodes: int) -> np.ndarray:
 SCORER_BACKENDS = ("batch", "numpy", "jax", "pallas", "auto", "reference")
 
 
-def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch"):
-    """Build ``placements [B, n] -> comm_cost [B]`` for the hot loops.
+def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch",
+                objective="comm_cost"):
+    """Build ``placements [B, n] -> score [B]`` for the hot loops.
 
     ``backend="batch"`` keeps optimizer trajectories bit-identical to the
     sequential reference on integer-volume graphs (float64 all the way), which
@@ -472,10 +474,23 @@ def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch"):
     sum can differ from the sequential loop in the last ulp (pairwise vs
     sequential float64 summation) — pass ``backend="reference"`` when exact
     seed-reproduction of pre-noc_batch trajectories on such graphs matters.
+
+    ``objective`` selects what the score *is*: the default ``"comm_cost"``
+    keeps this exact comm-cost path (bit-identical trajectories); any other
+    spec (a name from :data:`repro.deploy.objective.OBJECTIVES` or a
+    ``{metric: weight}`` dict) dispatches to the full-metrics objective scorer
+    of :mod:`repro.deploy.objective`.
     """
     if backend not in SCORER_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"choose from {SCORER_BACKENDS}")
+    if objective not in (None, "comm_cost"):
+        # deploy sits above core in the layering — import lazily to keep
+        # `import repro.core` light and cycle-free
+        from ..deploy.objective import as_objective, objective_scorer
+        obj = as_objective(objective)
+        if not obj.is_comm_cost:
+            return objective_scorer(noc, graph, obj, backend)
     if backend == "reference":
         def score_ref(placements):
             P = np.atleast_2d(np.asarray(placements, dtype=int))

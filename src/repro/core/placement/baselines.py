@@ -34,10 +34,12 @@ def sigmate(n_nodes: int, noc) -> np.ndarray:
 
 
 def random_search(graph, noc, iters: int = 2000, seed: int = 0,
-                  backend: str = "batch") -> np.ndarray:
-    """Paper's RS baseline: sample random injective placements, keep the best."""
+                  backend: str = "batch",
+                  objective="comm_cost") -> np.ndarray:
+    """Paper's RS baseline: sample random injective placements, keep the best
+    (under ``objective`` — comm cost by default, see repro.deploy.objective)."""
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend)
+    score = make_scorer(noc, graph, backend, objective)
     best, best_cost = None, np.inf
     for _ in range(iters):
         p = rng.permutation(noc.n_cores)[:graph.n]
@@ -49,15 +51,17 @@ def random_search(graph, noc, iters: int = 2000, seed: int = 0,
 
 def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
                         t_end_frac: float = 1e-3, seed: int = 0,
-                        init=None, backend: str = "batch") -> np.ndarray:
+                        init=None, backend: str = "batch",
+                        objective="comm_cost") -> np.ndarray:
     """Pairwise-swap SA over placements (beyond-paper local-search reference,
     cf. cyclic RL+SA placement [Vashisht et al. 2020]).
 
     Temperature starts at ``t0 × initial_cost`` and decays geometrically to
-    ``t_end_frac`` of that over ``iters`` steps.
+    ``t_end_frac`` of that over ``iters`` steps. ``objective`` selects the
+    annealed score (comm cost by default; any repro.deploy.objective spec).
     """
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend)
+    score = make_scorer(noc, graph, backend, objective)
     cur = np.array(init if init is not None else zigzag(graph.n, noc))
     validate_placements(noc, cur, graph.n)   # reject bad user-supplied init
     # extend with free cores so swaps can move nodes to empty cells

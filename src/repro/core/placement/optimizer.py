@@ -11,6 +11,15 @@ summation differences possible on continuous volumes), ``"jax"`` (jit+vmap,
 for accelerator hosts / big populations), or ``"reference"`` (the original
 per-edge Python loop). The ``population_*`` methods score whole populations
 per call.
+
+``objective`` selects *what* the searches minimize (see
+:mod:`repro.deploy.objective`): the default ``"comm_cost"`` keeps every method
+seed-for-seed bit-identical to the historical comm-cost-only driver; any other
+spec (``"max_link"``, ``"energy"``, ``"latency"``, a ``{metric: weight}``
+dict, or an ``Objective``) rescores candidates with the full batched metrics.
+The deterministic constructors (``zigzag``, ``sigmate``, ``greedy``) build the
+same placement regardless of objective; only their reported ``objective_cost``
+changes.
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import time
 
 import numpy as np
 
+from ...deploy.objective import as_objective
 from . import baselines, population
 from .policy_baseline import PolicyConfig, run_policy_baseline
 from .ppo import PPOConfig, run_ppo
@@ -35,6 +45,8 @@ class PlacementResult:
     max_link: float
     wall_time_s: float
     history: list | None = None
+    objective: str = "comm_cost"
+    objective_cost: float = float("nan")
 
     def summary(self) -> dict:
         return {
@@ -45,6 +57,8 @@ class PlacementResult:
             "throughput": self.throughput,
             "max_link": self.max_link,
             "wall_time_s": self.wall_time_s,
+            "objective": self.objective,
+            "objective_cost": self.objective_cost,
         }
 
 
@@ -55,13 +69,15 @@ METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
 
 def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                        budget: int | None = None, backend: str | None = None,
-                       **kw) -> PlacementResult:
-    """``backend=None`` means the default ("batch" — and for ppo/policy, a
-    caller-supplied ``cfg`` keeps its own backend); an explicit value
-    overrides everywhere, including a passed ``cfg``."""
-    t0 = time.time()
+                       objective=None, **kw) -> PlacementResult:
+    """``backend=None`` / ``objective=None`` mean the defaults ("batch" /
+    "comm_cost" — and for ppo/policy, a caller-supplied ``cfg`` keeps its own
+    values); an explicit value overrides everywhere, including a passed
+    ``cfg``."""
+    t0 = time.perf_counter()
     history = None
     bk = backend or "batch"
+    ob = objective if objective is not None else "comm_cost"
     if method == "zigzag":
         placement = baselines.zigzag(graph.n, noc)
     elif method == "sigmate":
@@ -69,48 +85,62 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     elif method == "random_search":
         placement = baselines.random_search(
             graph, noc, iters=kw.pop("iters", None) or budget or 2000,
-            seed=seed, backend=bk, **kw)
+            seed=seed, backend=bk, objective=ob, **kw)
     elif method == "simulated_annealing":
         placement = baselines.simulated_annealing(
             graph, noc, iters=kw.pop("iters", None) or budget or 5000,
-            seed=seed, backend=bk, **kw)
+            seed=seed, backend=bk, objective=ob, **kw)
     elif method == "population_random_search":
         placement = population.random_search_population(
             graph, noc, iters=kw.pop("iters", None) or budget or 2000,
-            seed=seed, backend=bk, **kw)
+            seed=seed, backend=bk, objective=ob, **kw)
     elif method == "population_simulated_annealing":
         # budget counts total evaluations for every method; population SA
         # performs pop_size evaluations per lock-step iteration
         pop = max(1, kw.get("pop_size", 16))
         iters = kw.pop("iters", None) or max(1, (budget or 16000) // pop)
         placement = population.simulated_annealing_population(
-            graph, noc, iters=iters, seed=seed, backend=bk, **kw)
+            graph, noc, iters=iters, seed=seed, backend=bk, objective=ob, **kw)
     elif method == "greedy":
         placement = baselines.greedy(graph, noc)
     elif method == "policy":
         cfg = kw.pop("cfg", None)
         if cfg is None:
             cfg = PolicyConfig(iterations=budget or 40, seed=seed, backend=bk,
-                               **kw)
-        elif backend is not None:
-            cfg = dataclasses.replace(cfg, backend=backend)
+                               objective=ob, **kw)
+        else:
+            cfg = _override_cfg(cfg, backend, objective)
         out = run_policy_baseline(graph, noc, cfg)
         placement, history = out["best_placement"], out["history"]
+        ob = cfg.objective
     elif method == "ppo":
         cfg = kw.pop("cfg", None)
         if cfg is None:
             cfg = PPOConfig(iterations=budget or 40, seed=seed, backend=bk,
-                            **kw)
-        elif backend is not None:
-            cfg = dataclasses.replace(cfg, backend=backend)
+                            objective=ob, **kw)
+        else:
+            cfg = _override_cfg(cfg, backend, objective)
         st = run_ppo(graph, noc, cfg)
         placement, history = st.best_placement, st.history
+        ob = cfg.objective
     else:
         raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
+    obj = as_objective(ob)
     m = noc.evaluate(graph, placement)
     return PlacementResult(
         method=method, placement=np.asarray(placement),
         comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,
         throughput=m.throughput, max_link=m.max_link,
-        wall_time_s=time.time() - t0, history=history)
+        wall_time_s=time.perf_counter() - t0, history=history,
+        objective=obj.name, objective_cost=obj.from_metrics(m, noc))
+
+
+def _override_cfg(cfg, backend, objective):
+    """Explicit optimize_placement backend/objective beat a passed cfg's."""
+    repl = {}
+    if backend is not None:
+        repl["backend"] = backend
+    if objective is not None:
+        repl["objective"] = objective
+    return dataclasses.replace(cfg, **repl) if repl else cfg

@@ -31,6 +31,7 @@ class PolicyConfig:
     baseline_decay: float = 0.9
     seed: int = 0
     backend: str = "batch"      # candidate scoring: "batch"|"jax"|"pallas"|"reference"
+    objective: object = "comm_cost"   # repro.deploy.objective spec (name|dict|Objective)
 
 
 def policy_specs(d_feat: int, n_cores: int, d_hidden: int):
@@ -104,7 +105,7 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
     params = materialize(key, policy_specs(feats.shape[1], noc.n_cores, cfg.d_hidden))
     adam = AdamWConfig(lr=cfg.lr)     # hoisted: static jit arg, one instance
     opt = adamw_init(params, adam)
-    score = make_scorer(noc, graph, cfg.backend)
+    score = make_scorer(noc, graph, cfg.backend, cfg.objective)
     baseline = None
     best_cost, best_placement = np.inf, None
     history = []

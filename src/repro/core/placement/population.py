@@ -24,17 +24,18 @@ from .baselines import zigzag
 
 def random_search_population(graph, noc, iters: int = 2000,
                              pop_size: int = 256, seed: int = 0,
-                             backend: str = "batch") -> np.ndarray:
+                             backend: str = "batch",
+                             objective="comm_cost") -> np.ndarray:
     """Paper's RS baseline, scored ``pop_size`` placements at a time.
 
     Consumes the RNG stream exactly like the sequential version (one
     ``rng.permutation`` per candidate, first-minimum wins), so for a given
-    ``seed`` it returns the same placement — only faster.
+    ``seed`` and ``objective`` it returns the same placement — only faster.
     """
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend)
+    score = make_scorer(noc, graph, backend, objective)
     best, best_cost = None, np.inf
     done = 0
     while done < iters:
@@ -52,18 +53,19 @@ def random_search_population(graph, noc, iters: int = 2000,
 def simulated_annealing_population(graph, noc, iters: int = 1000,
                                    pop_size: int = 16, t0: float = 0.05,
                                    t_end_frac: float = 1e-3, seed: int = 0,
-                                   init=None,
-                                   backend: str = "batch") -> np.ndarray:
+                                   init=None, backend: str = "batch",
+                                   objective="comm_cost") -> np.ndarray:
     """``pop_size`` independent pairwise-swap SA chains, batch-scored per step.
 
     Each step performs one proposed swap per chain (``pop_size`` evaluations
     per step, so ``iters × pop_size`` total — compare budgets accordingly).
+    ``objective`` selects the annealed score (repro.deploy.objective spec).
     """
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
     n, n_cores = graph.n, noc.n_cores
-    score = make_scorer(noc, graph, backend)
+    score = make_scorer(noc, graph, backend, objective)
 
     base = np.asarray(init if init is not None else zigzag(n, noc), dtype=int)
     validate_placements(noc, base, n)        # reject bad user-supplied init

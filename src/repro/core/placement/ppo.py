@@ -45,6 +45,11 @@ class PPOConfig:
     action_clip: float = 1.0
     seed: int = 0
     backend: str = "batch"      # rollout scoring: "batch"|"jax"|"pallas"|"reference"
+    objective: object = "comm_cost"   # repro.deploy.objective spec (name|dict|Objective)
+    device_discretize: bool = False   # opt-in jitted lax.scan collision resolver
+    # (host float64 binning either way; the device resolver matches the numpy
+    #  resolver exactly on integer cells, but stays off by default so the
+    #  rollout pipeline of record is the bit-exact host path)
 
 
 def _freeze_gcn_grads(grads):
@@ -136,11 +141,22 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
     opt_a, opt_c = adamw_init(actor, adam), adamw_init(critic, adam)
 
     if baseline_cost is None:
+        from ...deploy.objective import as_objective
         from .baselines import zigzag
-        baseline_cost = noc.evaluate(graph, zigzag(graph.n, noc)).comm_cost
+        # reward scale is anchored at the Zigzag deployment's score under the
+        # *same* objective the rollouts are scored with (for the default
+        # comm-cost objective this is bit-identical to the historical
+        # noc.evaluate(...).comm_cost anchor)
+        baseline_cost = as_objective(cfg.objective).from_metrics(
+            noc.evaluate(graph, zigzag(graph.n, noc)), noc)
     baseline_cost = max(baseline_cost, 1e-12)
 
-    score = make_scorer(noc, graph, cfg.backend)
+    score = make_scorer(noc, graph, cfg.backend, cfg.objective)
+    resolver = None
+    if cfg.device_discretize:
+        from .discretize_batch import (continuous_to_grid_batch,
+                                       make_jax_resolver)
+        resolver = make_jax_resolver(noc.rows, noc.cols, priority)
     best_cost, best_placement = np.inf, None
     history = []
     for it in range(cfg.iterations):
@@ -148,8 +164,13 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
         mu, log_std = ac.actor_apply(actor, lap, feats)
         acts, logp_old = ac.sample_actions(k_s, mu, log_std, cfg.batch_size)
         acts_np = np.asarray(acts, np.float64)
-        placements = actions_to_placement_batch(
-            acts_np, noc.rows, noc.cols, cfg.action_clip, priority)
+        if resolver is not None:
+            cells = continuous_to_grid_batch(acts_np, noc.rows, noc.cols,
+                                             cfg.action_clip)
+            placements = np.asarray(resolver(cells), np.int64)
+        else:
+            placements = actions_to_placement_batch(
+                acts_np, noc.rows, noc.cols, cfg.action_clip, priority)
         costs = score(placements)        # whole rollout batch in one call
         b_min = int(costs.argmin())
         if costs[b_min] < best_cost:

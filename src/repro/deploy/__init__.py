@@ -1,0 +1,12 @@
+"""Unified deployment engine: profile -> partition -> place -> schedule.
+
+``deploy_model`` runs the paper's whole flow in one call and returns a
+:class:`DeploymentPlan`; :mod:`repro.deploy.objective` defines the pluggable
+multi-objective cost model every placement optimizer scores against
+(``objective="comm_cost"`` default, ``"max_link"``, ``"energy"``,
+``"latency"``, or weighted combinations). ``python -m repro.deploy`` sweeps
+models × methods × objectives from the command line.
+"""
+from .objective import (EnergyModel, Objective, OBJECTIVES,  # noqa: F401
+                        as_objective, objective_scorer)
+from .engine import DeploymentPlan, SCHEDULES, deploy_model  # noqa: F401

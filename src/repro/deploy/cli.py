@@ -1,0 +1,128 @@
+"""``python -m repro.deploy`` / ``repro-deploy``: end-to-end deployment sweeps.
+
+Sweeps models × methods × objectives through :func:`repro.deploy.deploy_model`
+on one NoC topology and prints a CSV-ish table (one row per deployment) with
+the paper's metrics plus per-stage wall times. ``--json`` stores the full
+:meth:`DeploymentPlan.report` dicts; ``--smoke`` runs a seconds-scale sweep so
+CI keeps the whole flow from bitrotting.
+
+Examples::
+
+    PYTHONPATH=src python -m repro.deploy                       # default sweep
+    PYTHONPATH=src python -m repro.deploy --models spike_vgg16 \\
+        --methods zigzag,simulated_annealing --objectives comm_cost,max_link \\
+        --cores 32 --budget 2000 --json results/deploy_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from ..core.noc import NoC
+from ..snn import spike_resnet18, spike_resnet50, spike_vgg16
+from .engine import SCHEDULES, deploy_model
+from .objective import OBJECTIVES
+
+MODELS = {
+    "spike_resnet18": spike_resnet18,
+    "spike_resnet50": spike_resnet50,
+    "spike_vgg16": spike_vgg16,
+}
+
+# paper §5.1 grids: 32 cores as 4x8, 64 as 8x8 (benchmarks/common.make_noc)
+GRIDS = {16: (4, 4), 32: (4, 8), 64: (8, 8), 256: (16, 16)}
+
+COLUMNS = ("model", "method", "objective", "objective_cost", "comm_cost",
+           "max_link", "latency_ms", "makespan_ms", "util", "place_s")
+
+
+def _row(plan) -> tuple:
+    r = plan.report()
+    p, s = r["placement"], r["schedule"]
+    return (r["model"], p["method"], p["objective"],
+            f"{p['objective_cost']:.4e}", f"{p['comm_cost']:.4e}",
+            f"{p['max_link']:.4e}", f"{p['latency_s'] * 1e3:.3f}",
+            f"{s['makespan_s'] * 1e3:.3f}" if s else "-",
+            f"{s['mean_utilization']:.3f}" if s else "-",
+            f"{r['stage_times_s']['place']:.2f}")
+
+
+def _csv(values) -> str:
+    return ",".join(str(v) for v in values)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-deploy",
+        description="End-to-end SNN deployment sweep: "
+                    "profile -> partition -> place -> schedule.")
+    ap.add_argument("--models", default="spike_vgg16",
+                    help=f"comma list from {tuple(MODELS)}")
+    ap.add_argument("--methods", default="zigzag,sigmate,random_search,ppo",
+                    help="comma list of optimize_placement methods")
+    ap.add_argument("--objectives", default="comm_cost",
+                    help=f"comma list from {tuple(OBJECTIVES)}")
+    ap.add_argument("--cores", type=int, default=32,
+                    help=f"NoC size; known grids: {sorted(GRIDS)}")
+    ap.add_argument("--torus", action="store_true")
+    ap.add_argument("--strategy", default="balanced",
+                    choices=("compute", "storage", "balanced"))
+    ap.add_argument("--schedule", default="fpdeep", choices=SCHEDULES)
+    ap.add_argument("--units", type=int, default=8,
+                    help="pipelined work units (feature-map rows / micro-batches)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="search budget (evaluations / iterations)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    help="scoring backend override (batch|jax|pallas|reference)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write full DeploymentPlan reports to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI sweep (tiny model/budgets)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        models = ["spike_resnet18"]
+        methods = ["zigzag", "sigmate", "random_search"]
+        objectives = ["comm_cost", "max_link"]
+        cores, budget, units = 16, 64, 4
+    else:
+        models = args.models.split(",")
+        methods = args.methods.split(",")
+        objectives = args.objectives.split(",")
+        cores, budget, units = args.cores, args.budget, args.units
+
+    if cores not in GRIDS:
+        ap.error(f"--cores must be one of {sorted(GRIDS)}")
+    rows, cols = GRIDS[cores]
+    noc = NoC(rows, cols, torus=args.torus, link_bw=8e9, core_flops=25.6e9,
+              hop_latency=2e-8)
+
+    for model_name in models:            # fail on typos before any sweep runs
+        if model_name not in MODELS:
+            ap.error(f"unknown model {model_name!r}; choose from {tuple(MODELS)}")
+
+    reports = []
+    print(_csv(COLUMNS))
+    for model_name in models:
+        cfg = MODELS[model_name](n_classes=10, in_res=32, T=4)
+        for method in methods:
+            for objective in objectives:
+                plan = deploy_model(
+                    cfg, noc, partition_strategy=args.strategy, method=method,
+                    objective=objective, schedule=args.schedule, n_units=units,
+                    seed=args.seed, budget=budget, backend=args.backend)
+                reports.append(plan.report())
+                print(_csv(_row(plan)))
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(reports, f, indent=2)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,156 @@
+"""The paper's end-to-end deployment flow as one engine (paper §4, Fig 3).
+
+``deploy_model`` chains the four stages every example and benchmark used to
+glue together by hand:
+
+1. **profile**  — per-layer compute/storage/traffic costs
+   (:func:`repro.snn.profile_model`, spike-aware);
+2. **partition** — balanced compute+storage slicing onto logical cores
+   (paper §4.2, :func:`repro.core.partition.partition_model`);
+3. **place**    — logical→physical core placement under a pluggable
+   :mod:`repro.deploy.objective` (paper §4.3 RL placement and the baselines,
+   :func:`repro.core.placement.optimize_placement`);
+4. **schedule** — fine-grained pipelined training schedule
+   (paper §4.3 / Fig 9, :mod:`repro.core.pipeline`).
+
+The result is a :class:`DeploymentPlan` carrying every stage's artifact,
+per-stage wall times, and a JSON-able :meth:`DeploymentPlan.report` — the unit
+future scenarios (multi-chip sweeps, evolutionary search, serving) compose.
+``python -m repro.deploy`` sweeps models × methods × objectives on top of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core import pipeline
+from ..core.partition import CoreSpec, LayerProfile, Partition, partition_model
+from ..snn.models import SNNConfig
+from ..snn.profile import profile_model
+from .objective import as_objective
+
+SCHEDULES = ("layerwise", "fpdeep", "one_f_one_b", "none")
+
+
+@dataclasses.dataclass
+class DeploymentPlan:
+    """Everything the deployment flow produced, stage by stage."""
+    model: str
+    noc: object                      # repro.core.NoC
+    profiles: list                   # [LayerProfile]
+    partition: Partition
+    graph: object                    # LogicalGraph the placer consumed
+    placement: object                # PlacementResult
+    schedule_name: str
+    schedule: object                 # pipeline.Schedule | None
+    n_units: int
+    stage_times_s: dict              # {"profile"|"partition"|"place"|"schedule": s}
+
+    def report(self) -> dict:
+        """JSON-able summary (what the CLI/benchmark sweeps emit)."""
+        r = self.placement
+        sched = None
+        if self.schedule is not None:
+            sched = {
+                "name": self.schedule_name,
+                "n_units": self.n_units,
+                "makespan_s": float(self.schedule.makespan),
+                "mean_utilization": float(self.schedule.mean_utilization()),
+            }
+        return {
+            "model": self.model,
+            "noc": {"rows": self.noc.rows, "cols": self.noc.cols,
+                    "torus": self.noc.torus},
+            "partition": {"strategy": self.partition.strategy,
+                          "n_slices": self.partition.n,
+                          "imbalance": float(self.partition.imbalance())},
+            "placement": {"method": r.method, "objective": r.objective,
+                          "objective_cost": float(r.objective_cost),
+                          "comm_cost": float(r.comm_cost),
+                          "mean_hops": float(r.mean_hops),
+                          "max_link": float(r.max_link),
+                          "latency_s": float(r.latency),
+                          "throughput": float(r.throughput),
+                          "wall_time_s": float(r.wall_time_s)},
+            "schedule": sched,
+            "stage_times_s": dict(self.stage_times_s),
+        }
+
+
+def _profiles(model, batch: int, training: bool, spike_density: float):
+    """model spec -> (name, [LayerProfile]); accepts an SNNConfig or an
+    already-profiled layer list (then the profile stage is a no-op)."""
+    if isinstance(model, SNNConfig):
+        return model.name, profile_model(model, batch=batch,
+                                         spike_density=spike_density,
+                                         training=training)
+    layers = list(model)
+    if not all(isinstance(l, LayerProfile) for l in layers):
+        raise TypeError("model must be an SNNConfig or a list of LayerProfile")
+    return f"profiled[{len(layers)}]", layers
+
+
+def _schedule(partition: Partition, schedule: str, n_units: int,
+              bwd_ratio: float, training: bool):
+    if schedule == "none":
+        return None
+    times = [s.latency(partition.core) for s in partition.slices]
+    if schedule == "layerwise":
+        return pipeline.layerwise(times, n_units, bwd_ratio, training)
+    if schedule == "fpdeep":
+        return pipeline.fpdeep(times, n_units, bwd_ratio, training)
+    # "one_f_one_b": 1F1B is defined on uniform per-stage times; model the
+    # chain with the mean slice latency and the configured bwd/fwd ratio
+    t_f = float(np.mean(times)) if times else 0.0
+    return pipeline.one_f_one_b(len(times), n_units,
+                                fwd_time=t_f, bwd_time=bwd_ratio * t_f)
+
+
+def deploy_model(model, noc, partition_strategy: str = "balanced",
+                 method: str = "ppo", objective="comm_cost",
+                 schedule: str = "fpdeep", n_units: int = 8,
+                 batch: int = 8, training: bool = True,
+                 spike_density: float = 0.15, core: CoreSpec = CoreSpec(),
+                 seed: int = 0, budget: int | None = None,
+                 backend: str | None = None, bwd_ratio: float = 2.0,
+                 **method_kw) -> DeploymentPlan:
+    """Run the full deployment flow of ``model`` onto ``noc``.
+
+    ``model`` is an :class:`repro.snn.SNNConfig` (profiled here) or a
+    pre-built ``list[LayerProfile]``. ``method``/``objective``/``backend``/
+    ``budget``/``method_kw`` go to :func:`optimize_placement`; ``schedule`` is
+    one of :data:`SCHEDULES` ("none" skips the scheduling stage).
+    """
+    # placement sits beside deploy in the layering (core.placement imports
+    # deploy.objective at module scope) — resolve it at call time
+    from ..core.placement import optimize_placement
+
+    # validate the cheap-to-check specs before any search work is spent
+    as_objective(objective)
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"choose from {SCHEDULES}")
+    t0 = time.perf_counter()
+    name, profiles = _profiles(model, batch, training, spike_density)
+    t1 = time.perf_counter()
+    part = partition_model(profiles, noc.n_cores, partition_strategy, core)
+    graph = part.to_graph()
+    if schedule == "one_f_one_b":
+        # 1F1B needs n_micro >= n_stages for a full pipe; report the count
+        # actually scheduled, not the request
+        n_units = max(n_units, part.n)
+    t2 = time.perf_counter()
+    result = optimize_placement(graph, noc, method=method, seed=seed,
+                                budget=budget, backend=backend,
+                                objective=objective, **method_kw)
+    t3 = time.perf_counter()
+    sched = _schedule(part, schedule, n_units, bwd_ratio, training)
+    t4 = time.perf_counter()
+    return DeploymentPlan(
+        model=name, noc=noc, profiles=profiles, partition=part, graph=graph,
+        placement=result, schedule_name=schedule, schedule=sched,
+        n_units=n_units,
+        stage_times_s={"profile": t1 - t0, "partition": t2 - t1,
+                       "place": t3 - t2, "schedule": t4 - t3})

@@ -1,0 +1,171 @@
+"""Pluggable placement objectives over batched NoC metrics (paper §4.3, Eq. 4).
+
+The paper optimizes placements for more than hop-weighted communication volume:
+§5 evaluates power, hotspot load (Fig 7/11), and throughput of the deployed
+network. Every optimizer in :mod:`repro.core.placement` historically hard-coded
+the comm-cost score; this module turns the score into a pluggable
+:class:`Objective` — a weighted combination of metrics derived from one
+:class:`repro.core.noc_batch.BatchMetrics` evaluation — threaded through
+``noc_batch.make_scorer(..., objective=)`` and
+``optimize_placement(..., objective=)``.
+
+Base metric terms (all per placement, lower is better):
+
+* ``comm_cost``  — Σ bytes × hops (the Eq. 4 CDV objective; the default).
+* ``max_link``   — hottest directed link's bytes (hotspot peak, Fig 7).
+* ``latency``    — the analytic makespan estimate of the NoC model.
+* ``mean_hops``  — traffic-weighted mean hop distance.
+* ``energy``     — analytic energy per step from the hop/link model:
+  dynamic link+router energy (``e_byte_hop × comm_cost``) plus static leakage
+  integrated over the step (``p_core_static × n_cores × latency``), see
+  :class:`EnergyModel`.
+
+An objective spec (accepted everywhere an ``objective=`` parameter exists) is
+a name from :data:`OBJECTIVES`, a ``{metric: weight}`` dict for weighted
+combinations, or an :class:`Objective` instance. ``"comm_cost"`` — the default
+spec — routes through the exact same scorer code path as before this module
+existed, so every optimizer stays seed-for-seed bit-identical unless a
+different objective is asked for.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import noc_batch as nb
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Analytic per-step energy of a deployed placement.
+
+    ``e_byte_hop`` folds link wire + router traversal energy into one J/byte
+    per hop figure (~10 pJ/byte, 28nm-NoC scale); ``p_core_static`` is leakage
+    per core, integrated over the step's makespan — so minimizing energy trades
+    traffic volume against latency rather than reducing to comm_cost.
+    """
+    e_byte_hop: float = 1e-11      # J per byte per hop (link + router dynamic)
+    p_core_static: float = 0.05    # W leakage per core
+
+    def energy(self, comm_cost, latency, n_cores: int):
+        """Works elementwise on [B] arrays and on scalars."""
+        return (self.e_byte_hop * comm_cost
+                + self.p_core_static * n_cores * latency)
+
+
+#: Metric names an Objective term may reference.
+METRIC_TERMS = ("comm_cost", "max_link", "latency", "mean_hops", "energy")
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Weighted sum of :data:`METRIC_TERMS`, evaluated from one NoC evaluation.
+
+    ``terms`` is ``((metric, weight), ...)``; weights are the caller's burden
+    to scale (comm_cost is bytes×hops, latency seconds, energy joules).
+    """
+    name: str
+    terms: tuple
+    energy_model: EnergyModel = EnergyModel()
+
+    def __post_init__(self):
+        if not self.terms:
+            raise ValueError("objective needs at least one term")
+        for metric, weight in self.terms:
+            if metric not in METRIC_TERMS:
+                raise ValueError(f"unknown metric {metric!r}; "
+                                 f"choose from {METRIC_TERMS}")
+            if not np.isfinite(weight):
+                raise ValueError(f"non-finite weight for {metric!r}")
+
+    @property
+    def is_comm_cost(self) -> bool:
+        """True iff this objective is exactly the historical comm-cost score
+        (the condition under which scoring takes the fast, bit-identical
+        gather-only path instead of a full metrics evaluation)."""
+        return self.terms == (("comm_cost", 1.0),)
+
+    def _term_value(self, metric: str, m, n_cores: int):
+        if metric == "energy":
+            return self.energy_model.energy(m.comm_cost, m.latency, n_cores)
+        return getattr(m, metric)
+
+    def from_metrics(self, m, noc) -> float:
+        """Scalar score from a reference :class:`repro.core.noc.NoCMetrics`."""
+        total = 0.0
+        for metric, weight in self.terms:
+            total += weight * self._term_value(metric, m, noc.n_cores)
+        return float(total)
+
+    def from_batch(self, m: nb.BatchMetrics, noc) -> np.ndarray:
+        """[B] scores from a :class:`repro.core.noc_batch.BatchMetrics`."""
+        total = np.zeros(m.comm_cost.shape[0])
+        for metric, weight in self.terms:
+            total += weight * np.asarray(
+                self._term_value(metric, m, noc.n_cores), np.float64)
+        return total
+
+
+#: Named single-metric objectives. Weighted combinations are spelled as
+#: ``{metric: weight}`` dicts; ``as_objective`` normalizes either form.
+OBJECTIVES = {
+    name: Objective(name, ((name, 1.0),))
+    for name in METRIC_TERMS
+}
+
+
+def as_objective(spec) -> Objective:
+    """Normalize an objective spec (name | ``{metric: weight}`` | Objective;
+    ``None`` means the default comm-cost objective)."""
+    if spec is None:
+        return OBJECTIVES["comm_cost"]
+    if isinstance(spec, Objective):
+        return spec
+    if isinstance(spec, str):
+        obj = OBJECTIVES.get(spec)
+        if obj is None:
+            raise ValueError(f"unknown objective {spec!r}; choose from "
+                             f"{tuple(OBJECTIVES)} or pass a "
+                             "{metric: weight} dict")
+        return obj
+    if isinstance(spec, dict):
+        terms = tuple((str(k), float(v)) for k, v in spec.items())
+        name = "+".join(f"{w:g}*{k}" for k, w in terms)
+        return Objective(name, terms)
+    raise TypeError(f"objective spec must be str, dict, or Objective, "
+                    f"got {type(spec).__name__}")
+
+
+def objective_scorer(noc, graph, objective, backend: str = "batch"):
+    """``placements [B, n] -> scores [B]`` under ``objective``.
+
+    The comm-cost objective delegates to :func:`repro.core.noc_batch.make_scorer`
+    (the bit-identical historical path). Anything else runs the full batched
+    metrics evaluation and combines terms; same no-per-call-validation contract
+    as ``make_scorer`` (validate user input once via ``validate_placements``).
+    """
+    obj = as_objective(objective)
+    if obj.is_comm_cost:
+        return nb.make_scorer(noc, graph, backend)
+    if backend not in nb.SCORER_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {nb.SCORER_BACKENDS}")
+    if backend == "reference":
+        def score_ref(placements):
+            P = np.atleast_2d(np.asarray(placements, dtype=int))
+            return np.array([obj.from_metrics(noc.evaluate(graph, p), noc)
+                             for p in P])
+        return score_ref
+
+    b = nb.batched_noc(noc)
+
+    def score(placements):
+        P = np.asarray(placements, dtype=np.int64)
+        if P.ndim == 1:
+            P = P[None, :]
+        if P.shape[0] == 0:
+            return np.zeros(0)
+        m = b.evaluate(graph, P, backend=backend, validate=False)
+        return obj.from_batch(m, noc)
+    return score

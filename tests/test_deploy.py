@@ -1,0 +1,263 @@
+"""The deployment engine (`repro.deploy`): pluggable objectives + the
+profile -> partition -> place -> schedule flow.
+
+The SNAPSHOTS block pins every `optimize_placement` method's output
+(placement, comm_cost, and for the RL methods the best-cost history) as
+generated on `main` *before* the objective refactor, for fixed seeds — the
+regression guarantee that `objective="comm_cost"` (the default) is
+bit-identical to the historical comm-cost-only stack.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import NoC, random_dag
+from repro.core.noc_batch import make_scorer
+from repro.core.placement import optimize_placement
+from repro.core.placement.policy_baseline import PolicyConfig
+from repro.core.placement.ppo import PPOConfig, run_ppo
+from repro.deploy import (EnergyModel, Objective, OBJECTIVES, as_objective,
+                          deploy_model, objective_scorer)
+from repro.snn import spike_resnet18
+
+
+def _graph_noc():
+    return random_dag(12, seed=3), NoC(4, 4)
+
+
+# ---------------------------------------------------------------------------
+# objective specs + math
+# ---------------------------------------------------------------------------
+
+def test_as_objective_specs():
+    assert as_objective(None).is_comm_cost
+    assert as_objective("comm_cost").is_comm_cost
+    assert as_objective(OBJECTIVES["max_link"]).terms == (("max_link", 1.0),)
+    combo = as_objective({"comm_cost": 1.0, "energy": 2e9})
+    assert combo.terms == (("comm_cost", 1.0), ("energy", 2e9))
+    assert not combo.is_comm_cost
+    with pytest.raises(ValueError, match="unknown objective"):
+        as_objective("nope")
+    with pytest.raises(ValueError, match="unknown metric"):
+        as_objective({"hops_cubed": 1.0})
+    with pytest.raises(ValueError, match="at least one term"):
+        Objective("empty", ())
+    with pytest.raises(TypeError):
+        as_objective(3.14)
+
+
+def test_objective_batch_matches_reference_metrics():
+    """from_batch on BatchMetrics == from_metrics on each NoCMetrics."""
+    g, noc = _graph_noc()
+    rng = np.random.default_rng(0)
+    P = np.stack([rng.permutation(noc.n_cores)[:g.n] for _ in range(5)])
+    for spec in ("max_link", "latency", "energy", "mean_hops",
+                 {"comm_cost": 1.0, "energy": 2e9},
+                 {"max_link": 2.0, "latency": 1e9}):
+        score = objective_scorer(noc, g, spec, backend="batch")
+        obj = as_objective(spec)
+        want = np.array([obj.from_metrics(noc.evaluate(g, p), noc)
+                         for p in P])
+        np.testing.assert_allclose(score(P), want, rtol=1e-12)
+        ref = objective_scorer(noc, g, spec, backend="reference")
+        np.testing.assert_allclose(ref(P), want, rtol=1e-12)
+
+
+def test_energy_model_terms():
+    em = EnergyModel(e_byte_hop=2e-11, p_core_static=0.1)
+    assert em.energy(1e9, 1e-3, 16) == pytest.approx(2e-11 * 1e9
+                                                     + 0.1 * 16 * 1e-3)
+
+
+def test_comm_cost_objective_is_bitwise_the_plain_scorer():
+    """objective="comm_cost" must route through the identical scorer path."""
+    g, noc = _graph_noc()
+    rng = np.random.default_rng(1)
+    P = np.stack([rng.permutation(noc.n_cores)[:g.n] for _ in range(4)])
+    plain = make_scorer(noc, g, "batch")
+    via_obj = make_scorer(noc, g, "batch", "comm_cost")
+    assert np.array_equal(plain(P), via_obj(P))
+    via_inst = make_scorer(noc, g, "batch", OBJECTIVES["comm_cost"])
+    assert np.array_equal(plain(P), via_inst(P))
+
+
+# ---------------------------------------------------------------------------
+# regression: default objective is bit-identical to pre-refactor main
+# ---------------------------------------------------------------------------
+
+# generated on main before the objective refactor:
+# random_dag(12, seed=3) on NoC(4, 4), seed=0, the kwargs in _SNAPSHOT_CASES
+SNAPSHOTS = {
+    'zigzag': ([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11],
+               35975.16836267206, None),
+    'sigmate': ([0, 1, 2, 3, 7, 6, 5, 4, 8, 9, 10, 11],
+                27408.923841542466, None),
+    'greedy': ([0, 1, 2, 3, 6, 5, 4, 9, 8, 12, 10, 7],
+               28211.191696820035, None),
+    'random_search': ([2, 15, 5, 11, 9, 0, 6, 1, 10, 14, 12, 13],
+                      34950.73435803767, None),
+    'simulated_annealing': ([5, 1, 2, 3, 7, 4, 8, 6, 9, 13, 10, 11],
+                            23707.440164482374, None),
+    'population_random_search': ([2, 15, 5, 11, 9, 0, 6, 1, 10, 14, 12, 13],
+                                 34950.73435803767, None),
+    'population_simulated_annealing': (
+        [13, 10, 6, 5, 12, 4, 15, 9, 11, 7, 14, 8],
+        31702.149729923047, None),
+    'policy': ([15, 13, 6, 10, 9, 1, 0, 14, 5, 12, 2, 7],
+               34256.52734151426,
+               [34256.52734151426, 34256.52734151426, 34256.52734151426,
+                34256.52734151426]),
+    'ppo': ([5, 1, 6, 9, 4, 2, 7, 10, 3, 11, 14, 13],
+            32845.24718304858,
+            [33110.11991181029, 33110.11991181029, 32845.24718304858,
+             32845.24718304858]),
+}
+
+_SNAPSHOT_CASES = {
+    "zigzag": {},
+    "sigmate": {},
+    "greedy": {},
+    "random_search": {"budget": 60},
+    "simulated_annealing": {"budget": 120},
+    "population_random_search": {"budget": 64, "pop_size": 16},
+    "population_simulated_annealing": {"budget": 160, "pop_size": 8},
+    "policy": {"cfg": PolicyConfig(batch_size=8, iterations=4, seed=0)},
+    "ppo": {"cfg": PPOConfig(batch_size=8, iterations=4, ppo_epochs=2,
+                             seed=0)},
+}
+
+
+@pytest.mark.parametrize("method", sorted(SNAPSHOTS))
+def test_default_objective_matches_main_snapshot(method):
+    g, noc = _graph_noc()
+    r = optimize_placement(g, noc, method=method, seed=0,
+                           objective="comm_cost", **_SNAPSHOT_CASES[method])
+    placement, comm_cost, history = SNAPSHOTS[method]
+    assert r.placement.tolist() == placement
+    assert r.comm_cost == comm_cost
+    if history is not None:
+        assert [h["best_cost"] for h in r.history] == history
+    assert r.objective == "comm_cost"
+    assert r.objective_cost == r.comm_cost
+
+
+# ---------------------------------------------------------------------------
+# non-default objectives change the optimum
+# ---------------------------------------------------------------------------
+
+def test_max_link_objective_reduces_hotspot_peak():
+    g, noc = _graph_noc()
+    comm = optimize_placement(g, noc, method="simulated_annealing",
+                              budget=800, seed=0)
+    ml = optimize_placement(g, noc, method="simulated_annealing",
+                            budget=800, seed=0, objective="max_link")
+    assert ml.max_link <= comm.max_link
+    assert not np.array_equal(ml.placement, comm.placement)
+    assert ml.objective == "max_link"
+    assert ml.objective_cost == ml.max_link
+
+
+def test_objective_threads_through_cfg_methods():
+    g, noc = _graph_noc()
+    cfg = PPOConfig(batch_size=8, iterations=2, ppo_epochs=2, seed=0)
+    r = optimize_placement(g, noc, method="ppo", cfg=cfg,
+                           objective="max_link")
+    # explicit objective overrides the cfg's default comm_cost
+    assert r.objective == "max_link"
+    assert r.objective_cost == r.max_link
+    # and a cfg-carried objective survives when no override is given
+    cfg2 = PolicyConfig(batch_size=8, iterations=2, seed=0,
+                        objective="latency")
+    r2 = optimize_placement(g, noc, method="policy", cfg=cfg2)
+    assert r2.objective == "latency"
+
+
+def test_ppo_device_discretize_matches_host_path():
+    """PPOConfig(device_discretize=True) is an exact drop-in: the jitted
+    resolver consumes the same host-binned integer cells, so trajectories
+    stay bit-identical to the numpy resolver path."""
+    g, noc = _graph_noc()
+    base = PPOConfig(batch_size=8, iterations=3, ppo_epochs=2, seed=0)
+    host = run_ppo(g, noc, base)
+    import dataclasses
+    dev = run_ppo(g, noc, dataclasses.replace(base, device_discretize=True))
+    assert np.array_equal(host.best_placement, dev.best_placement)
+    assert host.best_cost == dev.best_cost
+    assert [h["mean_cost"] for h in host.history] == \
+        [h["mean_cost"] for h in dev.history]
+
+
+# ---------------------------------------------------------------------------
+# the deployment engine
+# ---------------------------------------------------------------------------
+
+def test_deploy_model_end_to_end():
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    noc = NoC(4, 4)
+    plan = deploy_model(cfg, noc, method="random_search", budget=40,
+                        schedule="fpdeep", n_units=4, seed=0)
+    assert plan.model == "spike-resnet18"
+    assert plan.partition.n == noc.n_cores
+    assert plan.graph.n == plan.partition.n
+    assert sorted(plan.stage_times_s) == ["partition", "place", "profile",
+                                          "schedule"]
+    assert all(t >= 0 for t in plan.stage_times_s.values())
+    assert plan.schedule.makespan > 0
+    rep = plan.report()
+    json.dumps(rep)                       # must be JSON-able as-is
+    assert rep["placement"]["method"] == "random_search"
+    assert rep["schedule"]["name"] == "fpdeep"
+    assert rep["partition"]["n_slices"] == noc.n_cores
+
+
+def test_deploy_model_layer_list_and_schedules():
+    from repro.snn import profile_model
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    layers = profile_model(cfg, batch=8)
+    noc = NoC(4, 4)
+    plan = deploy_model(layers, noc, method="zigzag", schedule="none")
+    assert plan.schedule is None
+    assert plan.report()["schedule"] is None
+    # pre-profiled input skips the profile stage but keeps its timing slot
+    assert "profile" in plan.stage_times_s
+    lw = deploy_model(layers, noc, method="zigzag", schedule="layerwise",
+                      n_units=4)
+    fp = deploy_model(layers, noc, method="zigzag", schedule="fpdeep",
+                      n_units=4)
+    ofb = deploy_model(layers, noc, method="zigzag", schedule="one_f_one_b",
+                       n_units=4)
+    assert fp.schedule.makespan <= lw.schedule.makespan
+    assert ofb.schedule.makespan > 0
+
+
+def test_deploy_model_objective_flows_to_report():
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    noc = NoC(4, 4)
+    plan = deploy_model(cfg, noc, method="simulated_annealing", budget=150,
+                        objective="max_link", schedule="none", seed=0)
+    rep = plan.report()["placement"]
+    assert rep["objective"] == "max_link"
+    assert rep["objective_cost"] == rep["max_link"]
+
+
+def test_deploy_model_rejects_bad_inputs():
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    noc = NoC(4, 4)
+    with pytest.raises(ValueError, match="unknown objective"):
+        deploy_model(cfg, noc, objective="bogus")
+    with pytest.raises(ValueError, match="unknown schedule"):
+        deploy_model(cfg, noc, method="zigzag", schedule="bogus")
+    with pytest.raises(TypeError, match="SNNConfig or a list"):
+        deploy_model(["not-a-profile"], noc)
+
+
+def test_deploy_cli_smoke(capsys):
+    from repro.deploy.cli import main
+    assert main(["--smoke"]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    header, rows = out[0], out[1:]
+    assert header.startswith("model,method,objective")
+    # 1 model x 3 methods x 2 objectives
+    assert len(rows) == 6
+    assert all(r.split(",")[2] in ("comm_cost", "max_link") for r in rows)

@@ -1,4 +1,5 @@
 """Pipelining schedules (paper §4.3 / Fig 9)."""
+import numpy as np
 import pytest
 
 from repro.core import pipeline
@@ -56,6 +57,61 @@ def test_one_f_one_b_dependencies():
             assert f_start[(s, m)] >= f_end[(s - 1, m)] - 1e-9
         for s in range(2):
             assert b_start[(s, m)] >= b_end[(s + 1, m)] - 1e-9
+
+
+def test_fpdeep_never_beaten_by_layerwise():
+    """fpdeep makespan <= layerwise makespan on any stage profile: layerwise
+    is the fully-serialized special case of the same dependence graph."""
+    cases = [
+        ([1.0], 1, 2.0, True),
+        ([1.0, 1.0, 1.0], 4, 2.0, True),
+        ([5.0, 0.1, 0.1], 8, 1.0, False),
+        ([0.5, 2.5, 1.0, 1.0, 3.0], 16, 3.0, True),
+        ([2.0, 2.0], 1, 2.0, False),
+    ]
+    for times, n_units, bwd_ratio, training in cases:
+        lw = pipeline.layerwise(times, n_units, bwd_ratio, training)
+        fp = pipeline.fpdeep(times, n_units, bwd_ratio, training)
+        assert fp.makespan <= lw.makespan + 1e-9, (times, n_units)
+        assert len(fp.events) == len(lw.events)
+
+
+def test_one_f_one_b_no_overlap_per_stage_engine():
+    """On one stage, two ops of the same phase (same engine) never overlap —
+    and with separate FP/BP engines a fwd may overlap at most one bwd."""
+    sch = pipeline.one_f_one_b(4, 8, fwd_time=1.0, bwd_time=2.0)
+    by_stage: dict = {}
+    for (s, m, ph, t0, t1) in sch.events:
+        by_stage.setdefault((s, ph), []).append((t0, t1))
+    for (s, ph), spans in by_stage.items():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans[:-1], spans[1:]):
+            assert b0 >= a1 - 1e-9, f"stage {s} {ph} ops overlap"
+
+
+def test_one_f_one_b_bwd_waits_for_local_fwd():
+    """bwd(s, m) never starts before fwd(s, m) finished on the same stage."""
+    sch = pipeline.one_f_one_b(3, 6)
+    f_end, b_start = {}, {}
+    for (s, m, ph, t0, t1) in sch.events:
+        if ph == "fwd":
+            f_end[(s, m)] = t1
+        else:
+            b_start[(s, m)] = t0
+    for key, t0 in b_start.items():
+        assert t0 >= f_end[key] - 1e-9
+
+
+def test_utilization_at_zero_makespan():
+    """Degenerate schedules (no stages / zero-time units) must not divide by
+    zero: utilization is defined as 0 and the waveform is all-zero."""
+    for sch in (pipeline.layerwise([], 4), pipeline.fpdeep([], 4),
+                pipeline.layerwise([0.0, 0.0], 3)):
+        assert sch.makespan == 0.0
+        assert sch.mean_utilization() == 0.0
+        t, u = sch.utilization_waveform(50)
+        assert len(t) == len(u) == 50
+        assert np.all(u == 0.0)
 
 
 def test_utilization_waveform_shape():
