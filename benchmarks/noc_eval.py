@@ -8,7 +8,13 @@ Sweeps population sizes {1, 16, 64, 256} on an 8×8 mesh and a 16×16 torus
 * ``batch_jax``  — same via jit+vmap (timed after a warm-up call), when jax
   is importable;
 
-plus the comm-cost-only scorer the optimizers use. Emits
+plus the comm-cost-only scorer the optimizers use, and the **fused objective
+scorers**: for non-comm objectives (``max_link``, ``energy``) the jax path
+historically ran the full ``evaluate`` (five metric arrays materialized on
+host, combined in numpy); ``BatchedNoC.make_fused_scorer`` compiles the
+objective to one device dispatch returning just the [B] scores. Sequential
+simulated annealing calls the scorer at B=1 every step, so the B=1 sweep is
+the before/after for SA on accelerator-backed objectives. Emits
 ``results/BENCH_noc_eval.json`` and the usual run.py CSV rows.
 """
 from __future__ import annotations
@@ -80,6 +86,44 @@ def noc_eval():
                    else "")
                 + f" best_x{best:.1f}"))
         record["cases"].append(case)
+
+    # ---- fused objective scorers (the sequential-SA before/after) ---------
+    # Sequential SA scores B=1 per step; the fused scorer's win there is the
+    # dispatch + host-materialization overhead of the full-metrics path.
+    if noc_batch.HAS_JAX:
+        from repro.deploy.objective import objective_scorer
+        R, C, torus = 8, 8, False
+        noc = NoC(R, C, torus=torus)
+        graph = random_dag(noc.n_cores, p=0.15, seed=0)
+        rng = np.random.default_rng(2)
+        fused_rec = {"rows": R, "cols": C, "objectives": {}}
+        for objective in ("max_link", "energy"):
+            obj_rec = {}
+            for pop in (1, 64):
+                P = np.stack([rng.permutation(noc.n_cores)
+                              for _ in range(pop)])
+                full = objective_scorer(noc, graph, objective, backend="jax",
+                                        fused=False)
+                fused = objective_scorer(noc, graph, objective, backend="jax")
+                full(P); fused(P)                    # warm-up / compile
+                full_s = _time(lambda: full(P), repeats=5)
+                fused_s = _time(lambda: fused(P), repeats=5)
+                obj_rec[f"pop{pop}"] = {
+                    "full_metrics_s": full_s, "fused_s": fused_s,
+                    "speedup": full_s / max(fused_s, 1e-12)}
+                rows_out.append((
+                    f"noc_eval.fused_{objective}.pop{pop}", fused_s * 1e6,
+                    f"full={full_s*1e6:.0f}us fused={fused_s*1e6:.0f}us "
+                    f"x{full_s / max(fused_s, 1e-12):.1f}"))
+            # end-to-end: a short sequential SA under the fused jax scorer
+            from repro.core.placement.baselines import simulated_annealing
+            sa_s = _time(lambda: simulated_annealing(
+                graph, noc, iters=200, seed=0, backend="jax",
+                objective=objective))
+            obj_rec["sa200_fused_s"] = sa_s
+            fused_rec["objectives"][objective] = obj_rec
+        record["fused_objective"] = fused_rec
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
     out = os.path.join(RESULTS_DIR, "BENCH_noc_eval.json")
     with open(out, "w") as f:

@@ -12,8 +12,8 @@ def main() -> None:
                     help="skip the slower placement sweeps")
     args = ap.parse_args()
 
-    from . import (deploy_e2e, noc_eval, paper_figs, ppo_pipeline, roofline,
-                   spike_kernel, tpu_placement)
+    from . import (deploy_e2e, multichip, noc_eval, paper_figs, ppo_pipeline,
+                   roofline, spike_kernel, tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -24,6 +24,7 @@ def main() -> None:
         ("noc_eval", noc_eval.noc_eval),
         ("ppo_pipeline", ppo_pipeline.ppo_pipeline),
         ("deploy_e2e", deploy_e2e.deploy_e2e),
+        ("multichip", multichip.multichip),
         ("fig6", paper_figs.fig6_placement_32),
         ("fig7_11", paper_figs.hotspots),
         ("fig10", paper_figs.fig10_vs_policy),
@@ -31,8 +32,9 @@ def main() -> None:
         ("tpu_placement", tpu_placement.tpu_placement),
     ]
     # noc_eval / ppo_pipeline time the slow seed paths (reference loop, Python
-    # spiral); deploy_e2e sweeps full placement searches per model x objective
-    fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e"}
+    # spiral); deploy_e2e / multichip sweep full placement searches per model
+    # x objective (multichip includes a PPO run on 64 cores)
+    fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip"}
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:

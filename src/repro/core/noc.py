@@ -1,8 +1,11 @@
 """2D mesh/torus NoC model (paper §3.2, §5 evaluation platform).
 
-The paper evaluates placements on a simulator of its many-core near-memory chip: a 2D
-mesh NoC with deterministic shortest-path ("clockwise search") routing, one router per
-core, 4 neighbour links. We reproduce that evaluator:
+The paper evaluates placements on a simulator of its many-core near-memory
+chip: a 2D mesh NoC with deterministic shortest-path ("clockwise search")
+routing, one router per core, 4 neighbour links. Since the topology refactor
+the machinery lives in :class:`repro.core.topology.GridTopology` (of which
+:class:`NoC` is the flat single-chip case — bit-identical routes, metrics and
+optimizer trajectories, snapshot-pinned in ``tests/test_topology.py``):
 
 * ``route(src, dst)``    — deterministic dimension-ordered (XY) shortest path; on a
   torus each dimension independently picks the shorter wrap direction (clockwise
@@ -14,167 +17,16 @@ core, 4 neighbour links. We reproduce that evaluator:
 
 The same evaluator doubles as the ICI traffic model for TPU pods (``tpu_adapter``):
 a v5e pod is a 16×16 torus of chips, so ``NoC(16, 16, torus=True)`` with
-link bandwidth = ICI bandwidth scores TPU device orderings.
+link bandwidth = ICI bandwidth scores TPU device orderings. Multi-chip systems
+with asymmetric inter-chip links are :class:`repro.core.topology.
+HierarchicalMesh`; every optimizer and batched scoring backend accepts any
+:class:`repro.core.topology.Topology`.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
-from .graph import LogicalGraph
+from .topology import GridTopology, NoCMetrics  # noqa: F401  (re-export)
 
 
-@dataclasses.dataclass
-class NoCMetrics:
-    comm_cost: float            # Σ_edges bytes × hops  == Σ_links traffic
-    hop_hist: dict              # hops -> total packets(bytes) at that distance
-    mean_hops: float            # traffic-weighted mean hop distance
-    link_traffic: dict          # ((r,c),(r',c')) -> bytes
-    core_traffic: np.ndarray    # [rows, cols] bytes routed through each core
-    max_link: float             # hottest link bytes
-    latency: float              # analytic makespan estimate (s)
-    throughput: float           # 1 / latency
-
-
-class NoC:
-    def __init__(self, rows: int, cols: int, torus: bool = False,
-                 link_bw: float = 1e9, core_flops: float = 1e9,
-                 hop_latency: float = 1e-8):
-        self.rows, self.cols, self.torus = rows, cols, torus
-        self.link_bw = float(link_bw)
-        self.core_flops = float(core_flops)
-        self.hop_latency = float(hop_latency)
-
-    @property
-    def n_cores(self) -> int:
-        return self.rows * self.cols
-
-    def coord(self, idx: int):
-        return divmod(int(idx), self.cols)
-
-    def index(self, r: int, c: int) -> int:
-        return int(r) * self.cols + int(c)
-
-    # ---- routing -------------------------------------------------------------
-    def _steps(self, a: int, b: int, size: int):
-        """Unit steps along one dimension, shorter wrap on a torus.
-
-        Clockwise tie-break: on an even-size torus the two directions tie at
-        size/2 hops; we take the positive (clockwise) direction, as the paper's
-        clockwise search does.
-        """
-        if a == b:
-            return []
-        if not self.torus:
-            step = 1 if b > a else -1
-            return [step] * abs(b - a)
-        fwd = (b - a) % size
-        bwd = (a - b) % size
-        if fwd <= bwd:                      # clockwise tie-break
-            return [1] * fwd
-        return [-1] * bwd
-
-    def route(self, src: int, dst: int):
-        """XY (row-first) shortest path: list of ((r,c),(r',c')) unit links."""
-        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
-        links = []
-        r, c = r0, c0
-        for s in self._steps(c0, c1, self.cols):     # X first
-            c2 = (c + s) % self.cols
-            links.append(((r, c), (r, c2)))
-            c = c2
-        for s in self._steps(r0, r1, self.rows):     # then Y
-            r2 = (r + s) % self.rows
-            links.append(((r, c), (r2, c)))
-            r = r2
-        return links
-
-    def hops(self, src: int, dst: int) -> int:
-        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
-        if not self.torus:
-            return abs(r0 - r1) + abs(c0 - c1)
-        dr = min((r1 - r0) % self.rows, (r0 - r1) % self.rows)
-        dc = min((c1 - c0) % self.cols, (c0 - c1) % self.cols)
-        return dr + dc
-
-    # ---- evaluation (paper Fig 6/7/8 metrics) ---------------------------------
-    def evaluate(self, graph: LogicalGraph, placement: np.ndarray) -> NoCMetrics:
-        """Score ``placement`` (array: logical node -> physical core index).
-
-        Placement must be injective (paper Definition C: |A| <= |N|).
-        """
-        placement = np.asarray(placement, dtype=int)
-        if np.unique(placement).size != placement.size:
-            raise ValueError("placement must map nodes to distinct cores")
-        if placement.max(initial=-1) >= self.n_cores or placement.min(initial=0) < 0:
-            raise ValueError("placement out of range")
-
-        link_traffic: dict = {}
-        core_traffic = np.zeros((self.rows, self.cols))
-        hop_hist: dict = {}
-        comm_cost = 0.0
-        weighted_hops = 0.0
-        total_bytes = 0.0
-        for i, j, vol in graph.edges:
-            src, dst = placement[i], placement[j]
-            links = self.route(src, dst)
-            h = len(links)
-            comm_cost += vol * h
-            weighted_hops += vol * h
-            total_bytes += vol
-            hop_hist[h] = hop_hist.get(h, 0.0) + vol
-            for (a, b) in links:
-                link_traffic[(a, b)] = link_traffic.get((a, b), 0.0) + vol
-                core_traffic[b] += vol          # traffic arriving into router b
-
-        # Analytic latency model: a step's makespan is bounded by the slowest
-        # core (compute + its router traffic serialized on link_bw) plus the
-        # longest path's hop latency. This is the simulator abstraction the
-        # paper's latency/throughput panels (Fig 6b/6c) are built on.
-        per_core_comm = core_traffic / self.link_bw
-        comp = np.zeros(self.n_cores)
-        comp[placement] = graph.compute / self.core_flops
-        per_core = comp.reshape(self.rows, self.cols) + per_core_comm
-        max_hops = max(hop_hist) if hop_hist else 0
-        latency = float(per_core.max() + max_hops * self.hop_latency) if graph.n else 0.0
-        mean_hops = weighted_hops / total_bytes if total_bytes else 0.0
-        return NoCMetrics(
-            comm_cost=comm_cost,
-            hop_hist=hop_hist,
-            mean_hops=mean_hops,
-            link_traffic=link_traffic,
-            core_traffic=core_traffic,
-            max_link=max(link_traffic.values()) if link_traffic else 0.0,
-            latency=latency,
-            throughput=1.0 / latency if latency > 0 else float("inf"),
-        )
-
-    def directional_cdv(self, graph: LogicalGraph, placement: np.ndarray):
-        """Per-core CDV_{left,right,up,down} (paper Eq. 4 terms): bytes crossing
-        each of the four links incident to every core."""
-        m = self.evaluate(graph, placement)
-        cdv = np.zeros((self.rows, self.cols, 4))  # L, R, U, D
-        for ((r0, c0), (r1, c1)), vol in m.link_traffic.items():
-            if r0 == r1:  # horizontal
-                going_right = ((c1 - c0) % self.cols) == 1
-                if going_right:
-                    cdv[r0, c0, 1] += vol
-                    cdv[r1, c1, 0] += vol
-                else:
-                    cdv[r0, c0, 0] += vol
-                    cdv[r1, c1, 1] += vol
-            else:
-                going_down = ((r1 - r0) % self.rows) == 1
-                if going_down:
-                    cdv[r0, c0, 3] += vol
-                    cdv[r1, c1, 2] += vol
-                else:
-                    cdv[r0, c0, 2] += vol
-                    cdv[r1, c1, 3] += vol
-        return cdv
-
-    def reward(self, graph: LogicalGraph, placement: np.ndarray) -> float:
-        """Paper Eq. 4: J = max{ -(CDV_l + CDV_r + CDV_u + CDV_d) } summed over
-        cores == negative total link traffic == negative comm_cost."""
-        return -self.evaluate(graph, placement).comm_cost
+class NoC(GridTopology):
+    """Single-chip 2D mesh/torus — the flat special case of
+    :class:`repro.core.topology.GridTopology` (all behaviour lives there)."""

@@ -1,21 +1,25 @@
 """Batched, table-driven NoC evaluation — the repo's hottest path, vectorized.
 
-``NoC.evaluate`` re-derives XY/torus routes edge-by-edge in Python on every call,
-and every placement optimizer (`ppo`, `policy_baseline`, the `baselines` searches)
-calls it once per candidate placement, thousands of times per run. This module
-precomputes, once per topology:
+``Topology.evaluate`` re-derives routes edge-by-edge in Python on every call,
+and every placement optimizer (`ppo`, `policy_baseline`, the `baselines` and
+`population` searches) calls it once per candidate placement, thousands of
+times per run. This module precomputes, once per topology (any
+:class:`repro.core.topology.Topology` — flat ``NoC`` grids and
+``HierarchicalMesh`` multi-chip systems alike):
 
 * ``hops[n, n]``                  — all-pairs hop distances (== route lengths, since
-  XY routes are shortest paths);
+  the deterministic routes are shortest paths);
 * ``route_links[n, n, max_hops]`` — the deterministic route of every (src, dst)
-  pair as padded directed-link ids, built by replaying the reference
-  :meth:`NoC.route`, so tie-breaks (clockwise on even tori) match bit-for-bit;
-* ``link_dst[n_links]``           — destination core of every directed link.
+  pair as padded directed-link ids, built by replaying the topology's
+  reference router, so tie-breaks (clockwise on even tori) match bit-for-bit;
+* ``link_dst[n_links]``           — destination core of every directed link;
+* per-link attribute vectors (``inv_bw``, summed route latencies,
+  ``energy_per_byte``, the inter-chip mask) when the topology is non-uniform.
 
-A directed link is identified as ``src_core * 4 + direction`` with directions
-L/R/U/D = 0/1/2/3, the ordering of :meth:`NoC.directional_cdv`. Every metric of
-:class:`repro.core.noc.NoCMetrics` then becomes gather + segment-sum over these
-tables, batched over a population axis:
+For grids a directed link is identified as ``src_core * 4 + direction`` with
+directions L/R/U/D = 0/1/2/3, the ordering of ``GridTopology.directional_cdv``.
+Every metric of :class:`repro.core.topology.NoCMetrics` then becomes gather +
+segment-sum over these tables, batched over a population axis:
 
 * **numpy backend** — float64; reproduces the reference loop exactly on
   integer-volume graphs (sum of exactly-representable products), which is why it
@@ -33,7 +37,10 @@ tables, batched over a population axis:
 Entry points: :func:`evaluate_batch`, :func:`comm_cost_batch`,
 :func:`directional_cdv_batch`, and :func:`make_scorer` (the scoring closure
 the optimizers use — comm-cost by default, any :mod:`repro.deploy.objective`
-spec via ``objective=``).
+spec via ``objective=``). :meth:`BatchedNoC.make_fused_scorer` builds fused
+jax/pallas scorers for non-comm objectives (``max_link``/``energy``/...)
+that return [B] scores in one device dispatch without materializing the full
+:class:`BatchMetrics`.
 """
 from __future__ import annotations
 
@@ -42,7 +49,7 @@ import dataclasses
 import numpy as np
 
 from .graph import LogicalGraph
-from .noc import NoC
+from .topology import Topology
 
 # JAX is only needed for backend="jax"; detect cheaply, import lazily so that
 # `import repro.core` (and the default numpy scoring path) stays light.
@@ -67,9 +74,6 @@ def _jx_float():
     order can still differ in the last ulp), else float32."""
     return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
 
-# Directed-link direction slots; same order as NoC.directional_cdv.
-L, R, U, D = 0, 1, 2, 3
-_OPP = np.array([R, L, D, U], dtype=np.int64)
 
 # Soft cap on elements materialized per numpy scatter chunk (memory guard).
 _CHUNK_ELEMS = 20_000_000
@@ -81,15 +85,27 @@ _CHUNK_ELEMS = 20_000_000
 
 @dataclasses.dataclass(frozen=True)
 class NoCTables:
-    """Per-topology routing tensors (independent of link_bw / core_flops)."""
+    """Per-topology routing tensors.
+
+    ``uniform`` marks an all-links-equal topology (flat NoC): the per-link
+    attribute fields are None and evaluation takes the historical scalar
+    paths bit-for-bit. Non-uniform topologies carry per-link inverse
+    bandwidths, the [n, n] summed route latencies, and (optionally) per-link
+    energies and the inter-chip mask.
+    """
     rows: int
     cols: int
     torus: bool
     hops: np.ndarray          # [n, n] int32 shortest hop distance
     route_links: np.ndarray   # [n, n, max_hops] int32 link ids, padded with n_links
     link_dst: np.ndarray      # [n_links] int32 destination core of each link
-    cdv_in_ids: np.ndarray    # [n_links] int32 cdv slot credited on the receiver
+    cdv_in_ids: np.ndarray | None   # [n_links] int32 (grids only)
     max_hops: int
+    uniform: bool = True
+    inv_bw: np.ndarray | None = None          # [n_links] 1/bytes-per-s
+    route_lat: np.ndarray | None = None       # [n, n] summed route latency (s)
+    energy_per_byte: np.ndarray | None = None  # [n_links] J/byte
+    interchip: np.ndarray | None = None        # [n_links] bool
 
     @property
     def n_cores(self) -> int:
@@ -97,61 +113,56 @@ class NoCTables:
 
     @property
     def n_links(self) -> int:
-        return 4 * self.n_cores
+        return int(self.link_dst.size)
 
 
-def _link_id(rows: int, cols: int, a, b) -> int:
-    """Directed link ((r,c),(r',c')) -> src_core*4 + {L,R,U,D}."""
-    (r0, c0), (r1, c1) = a, b
-    src = r0 * cols + c0
-    if r0 == r1:
-        d = R if (c1 - c0) % cols == 1 else L
-    else:
-        d = D if (r1 - r0) % rows == 1 else U
-    return src * 4 + d
-
-
-def build_tables(noc: NoC) -> NoCTables:
-    """Replay the reference router over all (src, dst) pairs into dense tables."""
-    n, rows, cols = noc.n_cores, noc.rows, noc.cols
-    idx = np.arange(n)
-    r, c = idx // cols, idx % cols
-    if noc.torus:
-        dr = np.minimum((r[:, None] - r[None, :]) % rows,
-                        (r[None, :] - r[:, None]) % rows)
-        dc = np.minimum((c[:, None] - c[None, :]) % cols,
-                        (c[None, :] - c[:, None]) % cols)
-    else:
-        dr = np.abs(r[:, None] - r[None, :])
-        dc = np.abs(c[:, None] - c[None, :])
-    hops = (dr + dc).astype(np.int32)
+def build_tables(topo: Topology) -> NoCTables:
+    """Replay the topology's router over all (src, dst) pairs into dense
+    tables, plus its per-link attribute vectors when non-uniform."""
+    n = topo.n_cores
+    hops = topo.hops_matrix()
     max_hops = int(hops.max()) if n else 0
-    n_links = 4 * n
+    n_links = topo.n_links
 
     route_links = np.full((n, n, max_hops), n_links, dtype=np.int32)
     for s in range(n):
         for d in range(n):
             if s == d:
                 continue
-            ids = [_link_id(rows, cols, a, b) for a, b in noc.route(s, d)]
+            ids = topo.route_ids(s, d)
             route_links[s, d, :len(ids)] = ids
 
-    link_dst = np.empty(n_links, dtype=np.int32)
-    for core in range(n):
-        rr, cc = divmod(core, cols)
-        link_dst[core * 4 + L] = rr * cols + (cc - 1) % cols
-        link_dst[core * 4 + R] = rr * cols + (cc + 1) % cols
-        link_dst[core * 4 + U] = ((rr - 1) % rows) * cols + cc
-        link_dst[core * 4 + D] = ((rr + 1) % rows) * cols + cc
-    dirs = np.tile(np.arange(4, dtype=np.int64), n)
-    cdv_in_ids = (link_dst.astype(np.int64) * 4 + _OPP[dirs]).astype(np.int32)
-    return NoCTables(rows, cols, noc.torus, hops, route_links, link_dst,
-                     cdv_in_ids, max_hops)
+    link_dst = np.asarray(topo.link_dst_array(), dtype=np.int32)
+    cdv_in_ids = (np.asarray(topo.cdv_in_ids(), dtype=np.int32)
+                  if hasattr(topo, "cdv_in_ids") else None)
+
+    bw = topo.link_bandwidth()
+    lat = topo.link_latency()
+    uniform = bw is None and lat is None
+    inv_bw = route_lat = None
+    if not uniform:
+        inv_bw = 1.0 / (np.full(n_links, topo.link_bw)
+                        if bw is None else np.asarray(bw, np.float64))
+        lat_arr = (np.full(n_links, topo.hop_latency)
+                   if lat is None else np.asarray(lat, np.float64))
+        lat_pad = np.append(lat_arr, 0.0)       # padding id n_links -> 0 s
+        route_lat = (lat_pad[route_links].sum(axis=2) if max_hops
+                     else np.zeros((n, n)))
+    eb = topo.link_energy_per_byte()
+    ic = topo.interchip_mask()
+    rows, cols = topo.grid_shape
+    return NoCTables(rows, cols, bool(getattr(topo, "torus", False)), hops,
+                     route_links, link_dst, cdv_in_ids, max_hops,
+                     uniform=uniform, inv_bw=inv_bw, route_lat=route_lat,
+                     energy_per_byte=(None if eb is None
+                                      else np.asarray(eb, np.float64)),
+                     interchip=(None if ic is None
+                                else np.asarray(ic, bool)))
 
 
 def _check_placements(placements, n_nodes: int, n_cores: int | None):
     """Coerce to [B, n] int64; validate range + injectivity when ``n_cores``
-    is given (the checks ``NoC.evaluate`` performs)."""
+    is given (the checks ``Topology.evaluate`` performs)."""
     P = np.asarray(placements, dtype=np.int64)
     if P.ndim == 1:
         P = P[None, :]
@@ -188,14 +199,14 @@ class BatchMetrics:
 # ---------------------------------------------------------------------------
 
 class BatchedNoC:
-    """Vectorized evaluator for one :class:`NoC` topology.
+    """Vectorized evaluator for one :class:`repro.core.topology.Topology`.
 
     Tables are built once at construction (one Python pass over all core pairs)
     and reused for every graph/population scored afterwards. Use the module
     cache :func:`batched_noc` rather than constructing directly.
     """
 
-    def __init__(self, noc: NoC):
+    def __init__(self, noc: Topology):
         self.noc = noc
         self.tables = build_tables(noc)
         self._jax_fns: dict = {}
@@ -227,8 +238,9 @@ class BatchedNoC:
             return backend
         if backend == "reference":
             raise ValueError("backend='reference' is the sequential "
-                             "NoC.evaluate loop; call noc.evaluate directly or "
-                             "use make_scorer(noc, graph, 'reference')")
+                             "Topology.evaluate loop; call noc.evaluate "
+                             "directly or use make_scorer(noc, graph, "
+                             "'reference')")
         raise ValueError(f"unknown backend {backend!r}; "
                          "choose 'auto' | 'jax' | 'pallas' | 'numpy' | 'batch'")
 
@@ -269,23 +281,29 @@ class BatchedNoC:
                 core_traffic=np.zeros((B, t.rows, t.cols)),
                 link_traffic=np.zeros((B, t.n_links)))
         resolved = self._resolve(backend)
+        path_lat = None
         if resolved in ("jax", "pallas"):
             f = self._get_jax_fn("full_pallas" if resolved == "pallas"
                                  else "full")
-            cc, h_max, lt, core_tr, per_core_max = f(
-                jnp.asarray(P), jnp.asarray(src), jnp.asarray(dst),
-                jnp.asarray(vol, _jx_float()),
-                jnp.asarray(compute / noc.core_flops, _jx_float()))
+            out = f(jnp.asarray(P), jnp.asarray(src), jnp.asarray(dst),
+                    jnp.asarray(vol, _jx_float()),
+                    jnp.asarray(compute / noc.core_flops, _jx_float()))
+            if t.uniform:
+                cc, h_max, lt, core_tr, per_core_max = out
+            else:
+                cc, h_max, lt, core_tr, per_core_max, path_lat = out
+                path_lat = np.asarray(path_lat, np.float64)
             cc = np.asarray(cc, np.float64)
             h_max = np.asarray(h_max, np.int64)
             lt = np.asarray(lt, np.float64)
             core_tr = np.asarray(core_tr, np.float64)
             per_core_max = np.asarray(per_core_max, np.float64)
         else:
-            cc, h_max, lt, core_tr, per_core_max = self._numpy_full(
+            cc, h_max, lt, core_tr, per_core_max, path_lat = self._numpy_full(
                 P, src, dst, vol, compute)
         total = vol.sum()
-        latency = per_core_max + h_max * noc.hop_latency
+        latency = per_core_max + (h_max * noc.hop_latency if path_lat is None
+                                  else path_lat)
         return BatchMetrics(
             comm_cost=cc,
             mean_hops=cc / total if total else np.zeros(B),
@@ -306,6 +324,7 @@ class BatchedNoC:
         lt = np.empty((B, n_links))
         core_tr = np.empty((B, n))
         per_core_max = np.empty(B)
+        path_lat = None if t.uniform else np.empty(B)
         chunk = max(1, _CHUNK_ELEMS // max(E * mh, 1))
         for b0 in range(0, B, chunk):
             Pb = P[b0:b0 + chunk]
@@ -328,8 +347,16 @@ class BatchedNoC:
             core_tr[b0:b0 + bsz] = ctb
             comp = np.zeros((bsz, n))
             comp[np.arange(bsz)[:, None], Pb] = compute[None, :] / noc.core_flops
-            per_core_max[b0:b0 + bsz] = (comp + ctb / noc.link_bw).max(axis=1)
-        return cc, h_max, lt, core_tr, per_core_max
+            if t.uniform:
+                per_core_max[b0:b0 + bsz] = (comp + ctb / noc.link_bw).max(axis=1)
+            else:
+                # per-core serialization at each incoming link's own bandwidth
+                wct = np.bincount(dst_flat.ravel(),
+                                  weights=(ltb * t.inv_bw[None, :]).ravel(),
+                                  minlength=bsz * n).reshape(bsz, n)
+                per_core_max[b0:b0 + bsz] = (comp + wct).max(axis=1)
+                path_lat[b0:b0 + bsz] = t.route_lat[s, d].max(axis=1)
+        return cc, h_max, lt, core_tr, per_core_max, path_lat
 
     # ---- directional CDV (paper Eq. 4 terms) -------------------------------
     def directional_cdv(self, graph: LogicalGraph, placements,
@@ -337,6 +364,10 @@ class BatchedNoC:
                         validate: bool = True) -> np.ndarray:
         """[B, rows, cols, 4] bytes crossing each L/R/U/D link of every core."""
         t = self.tables
+        if t.cdv_in_ids is None:
+            raise ValueError("directional CDV is defined for grid topologies "
+                             f"only; {type(self.noc).__name__} has no L/R/U/D "
+                             "link structure")
         lt = self.evaluate(graph, placements, backend=backend,
                            validate=validate).link_traffic
         B = lt.shape[0]
@@ -359,6 +390,9 @@ class BatchedNoC:
             t.route_links.reshape(t.n_cores * t.n_cores, 0))
         link_dst = jnp.asarray(t.link_dst.astype(np.int32))
         n, n_links = t.n_cores, t.n_links
+        inv_bw_l = None if t.uniform else jnp.asarray(t.inv_bw)
+        route_lat_flat = (None if t.uniform else
+                          jnp.asarray(t.route_lat.reshape(-1)))
 
         if kind == "comm":
             @jax.jit
@@ -387,11 +421,18 @@ class BatchedNoC:
                                          w.reshape(B, -1).astype(jnp.float32),
                                          n_links,
                                          interpret=interpret).astype(vol.dtype)
-                core_tr = lt @ dst_oh.astype(vol.dtype)      # [B, n]
                 comp = jnp.zeros((B, n), vol.dtype).at[
                     jnp.arange(B)[:, None], P].set(comp_nodes[None, :])
-                per_core_max = (comp + core_tr * inv_bw).max(axis=1)
-                return cc, h.max(axis=1), lt, core_tr, per_core_max
+                if t.uniform:
+                    core_tr = lt @ dst_oh.astype(vol.dtype)      # [B, n]
+                    per_core_max = (comp + core_tr * inv_bw).max(axis=1)
+                    return cc, h.max(axis=1), lt, core_tr, per_core_max
+                core_tr = lt @ dst_oh.astype(vol.dtype)
+                wct = (lt * inv_bw_l[None, :].astype(vol.dtype)) @ \
+                    dst_oh.astype(vol.dtype)
+                per_core_max = (comp + wct).max(axis=1)
+                plat = route_lat_flat[s * n + d].max(axis=1)
+                return cc, h.max(axis=1), lt, core_tr, per_core_max, plat
         else:
             def one(p, src, dst, vol, comp_nodes):
                 s, d = p[src], p[dst]
@@ -403,11 +444,167 @@ class BatchedNoC:
                     w.reshape(-1))[:n_links]
                 core_tr = jnp.zeros(n, vol.dtype).at[link_dst].add(lt)
                 comp = jnp.zeros(n, vol.dtype).at[p].set(comp_nodes)
-                per_core_max = (comp + core_tr / self.noc.link_bw).max()
-                return cc, jnp.max(h), lt, core_tr, per_core_max
+                if t.uniform:
+                    per_core_max = (comp + core_tr / self.noc.link_bw).max()
+                    return cc, jnp.max(h), lt, core_tr, per_core_max
+                wct = jnp.zeros(n, vol.dtype).at[link_dst].add(
+                    lt * inv_bw_l.astype(vol.dtype))
+                per_core_max = (comp + wct).max()
+                plat = route_lat_flat[s * n + d].max()
+                return cc, jnp.max(h), lt, core_tr, per_core_max, plat
 
             fn = jax.jit(jax.vmap(one, in_axes=(0, None, None, None, None)))
         self._jax_fns[kind] = fn
+        return fn
+
+    # ---- fused objective scorers (jax/pallas) ------------------------------
+    def make_fused_scorer(self, graph: LogicalGraph, terms,
+                          e_byte_hop: float = 1e-11,
+                          p_core_static: float = 0.05,
+                          backend: str = "jax"):
+        """``placements [B, n] -> weighted objective scores [B]`` in one
+        fused device dispatch.
+
+        ``terms`` is ``((metric, weight), ...)`` over
+        ``comm_cost | max_link | latency | mean_hops | energy | interchip``.
+        Unlike the generic :func:`repro.deploy.objective.objective_scorer`
+        path (full :meth:`evaluate` → :class:`BatchMetrics` → numpy combine),
+        this compiles exactly the metric graph the objective needs: gather-only
+        for comm/mean-hops combos, a single link-traffic segment-sum (scatter
+        on the jax backend, the Pallas kernel on ``backend="pallas"``) when
+        link-level terms appear, and per-core reductions only when latency or
+        energy is involved. Energy uses the topology's per-link
+        ``energy_per_byte`` when available, else the scalar ``e_byte_hop``;
+        ``interchip`` contributes 0 on flat topologies.
+        """
+        resolved = self._resolve(backend)
+        if resolved not in ("jax", "pallas"):
+            raise ValueError("make_fused_scorer is the jax/pallas fast path; "
+                             f"got backend={backend!r}")
+        terms = tuple((str(m), float(w)) for m, w in terms)
+        key = ("fused", resolved, terms, float(e_byte_hop),
+               float(p_core_static))
+        fn = self._jax_fns.get(key)
+        if fn is None:
+            fn = self._build_fused_fn(resolved, terms, e_byte_hop,
+                                      p_core_static)
+            self._jax_fns[key] = fn
+        src, dst, vol, compute = self.edge_arrays(graph)
+        if src.size:
+            jsrc, jdst = jnp.asarray(src), jnp.asarray(dst)
+            jvol = jnp.asarray(vol, _jx_float())
+            jcomp = jnp.asarray(compute / self.noc.core_flops, _jx_float())
+
+        def score(placements):
+            P = np.asarray(placements, dtype=np.int64)
+            if P.ndim == 1:
+                P = P[None, :]
+            if P.shape[0] == 0 or src.size == 0:
+                return np.zeros(P.shape[0])
+            return np.asarray(fn(jnp.asarray(P), jsrc, jdst, jvol, jcomp),
+                              np.float64)
+        return score
+
+    def _build_fused_fn(self, resolved: str, terms, e_byte_hop: float,
+                        p_core_static: float):
+        _import_jax()
+        t = self.tables
+        known = ("comm_cost", "max_link", "latency", "mean_hops", "energy",
+                 "interchip")
+        metrics = [m for m, _ in terms]
+        unknown = [m for m in metrics if m not in known]
+        if unknown:
+            raise ValueError(f"fused scorer cannot compute {unknown}; "
+                             f"supported terms: {known}")
+        w = {}
+        for m, weight in terms:
+            w[m] = w.get(m, 0.0) + weight
+        need_links = any(m in ("max_link", "latency", "energy", "interchip")
+                         for m in w)
+        need_latency = "latency" in w or "energy" in w
+
+        hops = jnp.asarray(t.hops)
+        flat_routes = jnp.asarray(
+            t.route_links.reshape(t.n_cores * t.n_cores, t.max_hops)
+            if t.max_hops else
+            t.route_links.reshape(t.n_cores * t.n_cores, 0))
+        link_dst = jnp.asarray(t.link_dst.astype(np.int32))
+        n, n_links = t.n_cores, t.n_links
+        inv_bw_l = None if t.uniform else jnp.asarray(t.inv_bw)
+        route_lat_flat = (None if t.uniform else
+                          jnp.asarray(t.route_lat.reshape(-1)))
+        eb = (None if t.energy_per_byte is None
+              else jnp.asarray(t.energy_per_byte))
+        ic = (None if t.interchip is None
+              else jnp.asarray(t.interchip.astype(np.float64)))
+        hop_latency, link_bw = self.noc.hop_latency, self.noc.link_bw
+        static_w = p_core_static * n
+
+        if resolved == "pallas":
+            from ..kernels.noc_segsum import link_traffic_pallas
+            interpret = jax.default_backend() != "tpu"
+            dst_oh = np.zeros((n_links, n), np.float32)
+            dst_oh[np.arange(n_links), t.link_dst] = 1.0
+            dst_oh = jnp.asarray(dst_oh)
+
+        def batched_link_traffic(ids, vol, dtype):
+            B = ids.shape[0]
+            wts = jnp.broadcast_to(vol[None, :, None], ids.shape)
+            if resolved == "pallas":
+                return link_traffic_pallas(
+                    ids.reshape(B, -1), wts.reshape(B, -1).astype(jnp.float32),
+                    n_links, interpret=interpret).astype(dtype)
+
+            def one(i, ww):
+                return jnp.zeros(n_links + 1, dtype).at[i.reshape(-1)].add(
+                    ww.reshape(-1))[:n_links]
+            return jax.vmap(one)(ids, wts.astype(dtype))
+
+        def core_sum(lt, dtype):
+            """[B, n_links] -> [B, n] sum of link values into their dst core."""
+            if resolved == "pallas":
+                return lt @ dst_oh.astype(dtype)
+            return jax.vmap(lambda x: jnp.zeros(n, dtype).at[link_dst]
+                            .add(x))(lt)
+
+        @jax.jit
+        def fn(P, src, dst, vol, comp_nodes):
+            s, d = P[:, src], P[:, dst]                      # [B, E]
+            h = hops[s, d]
+            cc = (h.astype(vol.dtype) * vol[None, :]).sum(axis=1)
+            total = jnp.zeros_like(cc)
+            if "comm_cost" in w:
+                total = total + w["comm_cost"] * cc
+            if "mean_hops" in w:
+                tv = jnp.maximum(vol.sum(), jnp.finfo(vol.dtype).tiny)
+                total = total + w["mean_hops"] * cc / tv
+            if need_links:
+                ids = flat_routes[s * n + d]                 # [B, E, max_hops]
+                lt = batched_link_traffic(ids, vol, vol.dtype)
+                if "max_link" in w:
+                    total = total + w["max_link"] * lt.max(axis=1)
+                if "interchip" in w and ic is not None:
+                    total = total + w["interchip"] * (lt @ ic.astype(vol.dtype))
+                if need_latency:
+                    B = P.shape[0]
+                    comp = jnp.zeros((B, n), vol.dtype).at[
+                        jnp.arange(B)[:, None], P].set(comp_nodes[None, :])
+                    if t.uniform:
+                        wct = core_sum(lt, vol.dtype) / link_bw
+                        plat = h.max(axis=1).astype(vol.dtype) * hop_latency
+                    else:
+                        wct = core_sum(lt * inv_bw_l[None, :].astype(vol.dtype),
+                                       vol.dtype)
+                        plat = route_lat_flat[s * n + d].max(axis=1)
+                    latency = (comp + wct).max(axis=1) + plat
+                    if "latency" in w:
+                        total = total + w["latency"] * latency
+                    if "energy" in w:
+                        dyn = (e_byte_hop * cc if eb is None
+                               else lt @ eb.astype(vol.dtype))
+                        total = total + w["energy"] * (
+                            dyn + static_w * latency)
+            return total
         return fn
 
 
@@ -418,38 +615,38 @@ class BatchedNoC:
 _CACHE: dict = {}
 
 
-def batched_noc(noc: NoC) -> BatchedNoC:
-    """Cached :class:`BatchedNoC` per topology (+ bandwidth/latency params)."""
-    key = (noc.rows, noc.cols, noc.torus, noc.link_bw, noc.core_flops,
-           noc.hop_latency)
+def batched_noc(noc: Topology) -> BatchedNoC:
+    """Cached :class:`BatchedNoC` per topology (structural
+    :meth:`Topology.cache_key` — grid shape + per-link attribute params)."""
+    key = noc.cache_key()
     b = _CACHE.get(key)
     if b is None:
         b = _CACHE[key] = BatchedNoC(noc)
     return b
 
 
-def evaluate_batch(noc: NoC, graph: LogicalGraph, placements,
+def evaluate_batch(noc: Topology, graph: LogicalGraph, placements,
                    backend: str = "auto") -> BatchMetrics:
     """Score a [B, n] population of placements in one vectorized call."""
     return batched_noc(noc).evaluate(graph, placements, backend=backend)
 
 
-def comm_cost_batch(noc: NoC, graph: LogicalGraph, placements,
+def comm_cost_batch(noc: Topology, graph: LogicalGraph, placements,
                     backend: str = "auto") -> np.ndarray:
     """[B] comm_cost (== the CDV objective of Eq. 4, negated reward)."""
     return batched_noc(noc).comm_cost(graph, placements, backend=backend)
 
 
-def directional_cdv_batch(noc: NoC, graph: LogicalGraph, placements,
+def directional_cdv_batch(noc: Topology, graph: LogicalGraph, placements,
                           backend: str = "auto") -> np.ndarray:
     """[B, rows, cols, 4] per-core directional CDV, batched."""
     return batched_noc(noc).directional_cdv(graph, placements, backend=backend)
 
 
-def validate_placements(noc: NoC, placements, n_nodes: int) -> np.ndarray:
-    """Check a [B, n] (or [n]) placement array the way ``NoC.evaluate`` does
-    (injective, in range); returns the 2-D int64 array. For validating user
-    input once before handing it to an unvalidated scorer. Needs only
+def validate_placements(noc: Topology, placements, n_nodes: int) -> np.ndarray:
+    """Check a [B, n] (or [n]) placement array the way ``Topology.evaluate``
+    does (injective, in range); returns the 2-D int64 array. For validating
+    user input once before handing it to an unvalidated scorer. Needs only
     ``noc.n_cores`` — does not build (or cache) routing tables."""
     return _check_placements(placements, n_nodes, noc.n_cores)
 
@@ -464,7 +661,7 @@ def validate_placements(noc: NoC, placements, n_nodes: int) -> np.ndarray:
 SCORER_BACKENDS = ("batch", "numpy", "jax", "pallas", "auto", "reference")
 
 
-def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch",
+def make_scorer(noc: Topology, graph: LogicalGraph, backend: str = "batch",
                 objective="comm_cost"):
     """Build ``placements [B, n] -> score [B]`` for the hot loops.
 
@@ -479,7 +676,8 @@ def make_scorer(noc: NoC, graph: LogicalGraph, backend: str = "batch",
     keeps this exact comm-cost path (bit-identical trajectories); any other
     spec (a name from :data:`repro.deploy.objective.OBJECTIVES` or a
     ``{metric: weight}`` dict) dispatches to the full-metrics objective scorer
-    of :mod:`repro.deploy.objective`.
+    of :mod:`repro.deploy.objective` (which fuses the metric graph into one
+    device dispatch on the jax/pallas backends).
     """
     if backend not in SCORER_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "

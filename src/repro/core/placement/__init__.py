@@ -1,4 +1,5 @@
 from .optimizer import optimize_placement, PlacementResult, METHODS  # noqa: F401
 from .baselines import zigzag, sigmate, random_search, simulated_annealing  # noqa: F401
-from .population import (random_search_population,  # noqa: F401
+from .population import (genetic_population,  # noqa: F401
+                         random_search_population,
                          simulated_annealing_population)

@@ -5,7 +5,13 @@ The search baselines score candidates through :func:`repro.core.noc_batch.make_s
 (``backend="batch"`` by default — vectorized float64, bit-identical to the
 per-edge reference loop on integer-volume graphs, within a last-ulp summation
 difference on continuous volumes; pass ``backend="reference"`` for the exact
-original path). Population-batched variants live in :mod:`.population`.
+original path), so they run on any :class:`repro.core.topology.Topology`.
+Note the constructors (zigzag/sigmate) and the plain searches are *flat-aware*
+only: on a multi-chip ``HierarchicalMesh`` they see the global core grid but
+not the chip boundaries — the benchmark baseline the chip-localizing searches
+(``genetic``, objective-weighted SA) are measured against in
+``benchmarks/multichip.py``. Population-batched variants (and the genetic
+evolutionary search) live in :mod:`.population`.
 """
 from __future__ import annotations
 

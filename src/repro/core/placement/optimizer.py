@@ -2,7 +2,10 @@
 
 ``optimize_placement(graph, noc, method=...)`` dispatches to all implemented methods
 and returns a uniform :class:`PlacementResult`, so benchmarks and the TPU adapter can
-sweep methods with one call.
+sweep methods with one call. ``noc`` is any :class:`repro.core.topology.Topology`
+— the flat single-chip ``NoC`` or a multi-chip ``HierarchicalMesh`` — since every
+method scores through the topology-generic batched tables (the ``genetic``
+evolutionary search included).
 
 Every search method scores candidates through a pluggable ``backend``:
 ``"batch"`` (default — vectorized float64 :mod:`repro.core.noc_batch`,
@@ -63,7 +66,7 @@ class PlacementResult:
 
 
 METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
-           "greedy", "policy", "ppo",
+           "greedy", "policy", "ppo", "genetic",
            "population_random_search", "population_simulated_annealing")
 
 
@@ -101,6 +104,18 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
         iters = kw.pop("iters", None) or max(1, (budget or 16000) // pop)
         placement = population.simulated_annealing_population(
             graph, noc, iters=iters, seed=seed, backend=bk, objective=ob, **kw)
+    elif method == "genetic":
+        # one whole-population scoring call per generation (+ the initial
+        # one), so budgets below 2*pop_size still spend up to 2*pop_size
+        # evaluations — the same at-least-one-round floor as population SA;
+        # genetic_population validates pop_size itself
+        pop = kw.setdefault("pop_size", 64)
+        gens = kw.pop("generations", None)
+        if gens is None:
+            gens = max(1, (budget or 6400) // max(pop, 1) - 1)
+        placement = population.genetic_population(
+            graph, noc, generations=gens, seed=seed, backend=bk,
+            objective=ob, **kw)
     elif method == "greedy":
         placement = baselines.greedy(graph, noc)
     elif method == "policy":

@@ -1,6 +1,6 @@
 """Population-batched placement search built on :mod:`repro.core.noc_batch`.
 
-Two families:
+Three families:
 
 * :func:`random_search_population` — draws the *same* permutation stream as the
   sequential ``baselines.random_search`` (same ``seed`` => same best placement)
@@ -11,15 +11,21 @@ Two families:
   deterministic ``init`` (zigzag by default, matching the sequential SA); the
   other chains start from random injective placements, so the population also
   acts as a multi-start restart strategy.
+* :func:`genetic_population` — evolutionary search: order-preserving
+  permutation recombination (OX1 crossover) + pairwise-swap mutation +
+  elitism, the whole population scored per generation through
+  :func:`repro.core.noc_batch.make_scorer` — so it works with every objective
+  spec and scoring backend (numpy, jax, pallas) and on any topology
+  (:class:`repro.core.topology.HierarchicalMesh` multi-chip systems included).
 
-Both return the best placement found, like their sequential counterparts.
+All return the best placement found, like their sequential counterparts.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from ..noc_batch import make_scorer, validate_placements
-from .baselines import zigzag
+from .baselines import sigmate, zigzag
 
 
 def random_search_population(graph, noc, iters: int = 2000,
@@ -97,4 +103,103 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
         if cost[i1] < best_cost:
             best, best_cost = slots[i1, :n].copy(), float(cost[i1])
         t *= cooling
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Genetic (evolutionary) search
+# ---------------------------------------------------------------------------
+
+def _ox_crossover(rng, p1: np.ndarray, p2: np.ndarray) -> np.ndarray:
+    """Order crossover (OX1) on two core permutations.
+
+    The child copies the ``[i, j)`` segment from ``p1`` and fills the
+    remaining slots with ``p2``'s cores in ``p2``'s order, starting after the
+    segment and wrapping — the classic order-preserving permutation
+    recombination, always yielding a valid (injective) permutation.
+    """
+    size = p1.size
+    i, j = np.sort(rng.integers(0, size + 1, 2))
+    if i == j:
+        return p1.copy()
+    child = np.empty(size, dtype=p1.dtype)
+    child[i:j] = p1[i:j]
+    fill = p2[~np.isin(p2, p1[i:j], assume_unique=True)]
+    tail = size - j                       # slots after the segment, pre-wrap
+    child[j:] = fill[:tail]
+    child[:i] = fill[tail:]
+    return child
+
+
+def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
+                       elite_frac: float = 0.125, tournament: int = 3,
+                       crossover_rate: float = 0.9, mutation_rate: float = 0.6,
+                       seed: int = 0, init=None, backend: str = "batch",
+                       objective="comm_cost") -> np.ndarray:
+    """Evolutionary placement search, whole population scored per generation.
+
+    Chromosomes are full core permutations (length ``noc.n_cores``; the first
+    ``graph.n`` entries are the placement), so crossover can also move nodes
+    through free cores. Individuals 0/1 seed the population with the
+    deterministic zigzag/sigmate constructors (or the validated user ``init``),
+    the rest start random; each generation keeps the ``elite_frac`` best
+    unchanged and refills by tournament selection + OX1 crossover
+    (:func:`_ox_crossover`) + pairwise-swap mutation (each child takes another
+    swap with probability ``mutation_rate`` — a geometric number of swaps,
+    ~1.5 expected at the 0.6 default). The total evaluation budget is
+    ``(generations + 1) × pop_size``.
+    """
+    if pop_size < 2:
+        raise ValueError(f"pop_size must be >= 2, got {pop_size}")
+    if tournament < 1:
+        raise ValueError(f"tournament must be >= 1, got {tournament}")
+    rng = np.random.default_rng(seed)
+    n, n_cores = graph.n, noc.n_cores
+    score = make_scorer(noc, graph, backend, objective)
+
+    def full_perm(placement) -> np.ndarray:
+        placement = np.asarray(placement, dtype=int)
+        free = np.setdiff1d(np.arange(n_cores), placement)
+        return np.concatenate([placement, free])
+
+    slots = np.empty((pop_size, n_cores), dtype=int)
+    if init is not None:
+        validate_placements(noc, np.asarray(init, dtype=int), n)
+        slots[0] = full_perm(init)
+    else:
+        slots[0] = full_perm(zigzag(n, noc))
+    slots[1] = full_perm(sigmate(n, noc))
+    for p in range(2, pop_size):
+        slots[p] = rng.permutation(n_cores)
+
+    n_elite = max(1, int(round(elite_frac * pop_size)))
+    cost = score(slots[:, :n])
+    i0 = int(np.argmin(cost))
+    best, best_cost = slots[i0, :n].copy(), float(cost[i0])
+
+    for _ in range(generations):
+        order = np.argsort(cost, kind="stable")
+        nxt = np.empty_like(slots)
+        nxt[:n_elite] = slots[order[:n_elite]]
+        # tournament selection: draw all parent candidates for the generation
+        # in one call so the RNG stream is a simple function of (seed, sizes)
+        cand = rng.integers(0, pop_size, (pop_size - n_elite, 2, tournament))
+        winners = cand[np.arange(pop_size - n_elite)[:, None, None],
+                       np.arange(2)[None, :, None],
+                       np.argmin(cost[cand], axis=2)[..., None]][..., 0]
+        for k in range(pop_size - n_elite):
+            a, b = winners[k]
+            if rng.random() < crossover_rate:
+                child = _ox_crossover(rng, slots[a], slots[b])
+            else:
+                child = slots[a].copy()
+            while rng.random() < mutation_rate:
+                i, j = rng.integers(0, n_cores, 2)
+                child[i], child[j] = child[j], child[i]
+            nxt[n_elite + k] = child
+        slots = nxt
+        cost = score(slots[:, :n])
+        i1 = int(np.argmin(cost))
+        if cost[i1] < best_cost:
+            best, best_cost = slots[i1, :n].copy(), float(cost[i1])
     return best

@@ -14,6 +14,12 @@ resolver (`discretize_batch`, bit-exact vs the sequential spiral), scored in one
 `noc_batch` call, and all ``ppo_epochs`` inner epochs run as a single jitted
 ``lax.scan`` dispatch (`_ppo_update_scan`) with rollout tensors device-resident.
 Benchmarked in ``benchmarks/ppo_pipeline.py``.
+
+``noc`` is any grid :class:`repro.core.topology.Topology` (the continuous
+actions discretize onto its ``rows × cols`` cell grid): flat ``NoC`` chips and
+multi-chip ``HierarchicalMesh`` systems score through the same batched tables,
+and the reward anchor (the Zigzag deployment under ``cfg.objective``) follows
+the topology's per-link latency/energy models automatically.
 """
 from __future__ import annotations
 

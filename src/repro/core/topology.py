@@ -1,0 +1,667 @@
+"""First-class NoC topology abstraction (paper §3.2, generalized).
+
+The paper evaluates placements on a single many-core chip — a flat 2D
+mesh/torus. Real SNN training systems tile *multiple* chips with asymmetric
+inter-chip links (slower, costlier than the on-chip NoC). This module turns
+the topology into a pluggable abstraction so every layer above it
+(:mod:`repro.core.noc_batch` tables, :mod:`repro.deploy.objective` models,
+all placement optimizers, the deployment engine) works on any of them:
+
+* :class:`Topology` — the abstract node/link communication graph: directed
+  links with per-link ``bandwidth`` / ``energy_per_byte`` / ``latency``
+  attributes and a deterministic routing function (``route_ids``). Provides a
+  generic per-link reference evaluator (:meth:`Topology.evaluate`).
+* :class:`GridTopology` — the 2D mesh/torus machinery (XY dimension-ordered
+  routing with the paper's clockwise tie-break). Carries the historical
+  ``NoC`` code verbatim, so a uniform grid evaluates **bit-identically** to
+  the pre-refactor ``NoC`` (snapshot-pinned in ``tests/test_topology.py``).
+  :class:`repro.core.noc.NoC` is its single-chip alias.
+* :class:`HierarchicalMesh` — a ``chips_rows × chips_cols`` grid of
+  ``core_rows × core_cols`` mesh chips joined by slower, costlier inter-chip
+  links. Routing stays global XY (deterministic); only the per-link
+  attributes differ, so the whole batched-table stack applies unchanged.
+* :func:`parse_topology` — the ``--topology`` spec grammar of the
+  ``repro-deploy`` CLI (``mesh:4x8``, ``torus:16x16``,
+  ``hier:2x2:4x4[,ibw=1e9,ien=8e-11]``).
+
+Link identity: directed link id ``src_core * 4 + direction`` with directions
+L/R/U/D = 0/1/2/3 for grids (the ordering of :meth:`GridTopology.
+directional_cdv`); generic topologies may use any dense id scheme as long as
+``route_ids``/``link_dst_array`` agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class NoCMetrics:
+    comm_cost: float            # Σ_edges bytes × hops  == Σ_links traffic
+    hop_hist: dict              # hops -> total packets(bytes) at that distance
+    mean_hops: float            # traffic-weighted mean hop distance
+    link_traffic: dict          # link label -> bytes (grids: ((r,c),(r',c')))
+    core_traffic: np.ndarray    # [rows, cols] bytes routed through each core
+    max_link: float             # hottest link bytes
+    latency: float              # analytic makespan estimate (s)
+    throughput: float           # 1 / latency
+
+
+# Directed-link direction slots for grids; same order as directional_cdv.
+L, R, U, D = 0, 1, 2, 3
+_OPP = (R, L, D, U)
+
+
+class Topology:
+    """Abstract node/link communication graph with deterministic routing.
+
+    Subclasses must provide ``n_cores``, ``n_links``, ``link_dst_array``,
+    ``route_ids`` and ``hops``; everything else (per-link attributes, the
+    generic evaluator, cache keys) has workable defaults. Per-link attribute
+    methods return ``None`` to mean "uniform" — scalar ``link_bw`` /
+    ``hop_latency`` everywhere — which is the condition under which the
+    batched evaluator and the energy model take their historical, bit-exact
+    scalar paths.
+    """
+
+    link_bw: float
+    core_flops: float
+    hop_latency: float
+
+    # ---- structure (abstract) ---------------------------------------------
+    @property
+    def n_cores(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_links(self) -> int:
+        raise NotImplementedError
+
+    def link_dst_array(self) -> np.ndarray:
+        """[n_links] int — destination core of each directed link."""
+        raise NotImplementedError
+
+    def link_src_array(self) -> np.ndarray:
+        """[n_links] int — source core of each directed link."""
+        raise NotImplementedError
+
+    def route_ids(self, src: int, dst: int) -> list:
+        """Deterministic route as directed link ids (shortest path)."""
+        raise NotImplementedError
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route_ids(src, dst))
+
+    def hops_matrix(self) -> np.ndarray:
+        """[n, n] int32 all-pairs hop distances (route lengths)."""
+        n = self.n_cores
+        h = np.zeros((n, n), dtype=np.int32)
+        for s in range(n):
+            for d in range(n):
+                if s != d:
+                    h[s, d] = self.hops(s, d)
+        return h
+
+    @property
+    def grid_shape(self) -> tuple:
+        """(rows, cols) used to reshape per-core metric maps."""
+        return (1, self.n_cores)
+
+    def link_label(self, lid: int):
+        """Hashable label of link ``lid`` used as ``link_traffic`` dict key."""
+        return (int(self.link_src_array()[lid]), int(self.link_dst_array()[lid]))
+
+    def link_id_of(self, label) -> int:
+        """Inverse of :meth:`link_label`."""
+        table = getattr(self, "_label_to_id", None)
+        if table is None:
+            table = {self.link_label(l): l for l in range(self.n_links)}
+            self._label_to_id = table
+        return table[label]
+
+    # ---- per-link attributes (None == uniform scalar) ---------------------
+    def link_bandwidth(self):
+        """[n_links] bytes/s per link, or None for uniform ``link_bw``."""
+        return None
+
+    def link_latency(self):
+        """[n_links] seconds per hop, or None for uniform ``hop_latency``."""
+        return None
+
+    def link_energy_per_byte(self):
+        """[n_links] J/byte per link, or None — scalar
+        :class:`repro.deploy.objective.EnergyModel` path."""
+        return None
+
+    def interchip_mask(self):
+        """[n_links] bool — True on inter-chip links; None on flat chips."""
+        return None
+
+    @property
+    def uniform_links(self) -> bool:
+        """True iff every link shares the scalar bandwidth/latency — the
+        bit-exact historical evaluation path applies."""
+        return self.link_bandwidth() is None and self.link_latency() is None
+
+    def cache_key(self) -> tuple:
+        """Structural identity for the :func:`repro.core.noc_batch.batched_noc`
+        table cache."""
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        """JSON-able topology summary for deployment reports."""
+        rows, cols = self.grid_shape
+        return {"kind": type(self).__name__, "rows": rows, "cols": cols,
+                "n_cores": self.n_cores}
+
+    # ---- generic per-link evaluation --------------------------------------
+    def _check_placement(self, placement: np.ndarray) -> np.ndarray:
+        placement = np.asarray(placement, dtype=int)
+        if np.unique(placement).size != placement.size:
+            raise ValueError("placement must map nodes to distinct cores")
+        if placement.max(initial=-1) >= self.n_cores or \
+                placement.min(initial=0) < 0:
+            raise ValueError("placement out of range")
+        return placement
+
+    def evaluate(self, graph, placement: np.ndarray) -> NoCMetrics:
+        """Generic reference evaluator reading per-link attributes.
+
+        Uniform grids short-circuit to the historical scalar loop in
+        :class:`GridTopology` instead; this path defines the semantics for
+        non-uniform topologies and mirrors the batched general path of
+        :mod:`repro.core.noc_batch`: per-core serialization time is
+        Σ incoming-link traffic / that link's bandwidth, and the path-latency
+        term is the slowest route's summed per-link latencies.
+        """
+        placement = self._check_placement(placement)
+        n, n_links = self.n_cores, self.n_links
+        bw = self.link_bandwidth()
+        inv_bw = (np.full(n_links, 1.0 / self.link_bw) if bw is None
+                  else 1.0 / np.asarray(bw, np.float64))
+        lat = self.link_latency()
+        lat = (np.full(n_links, self.hop_latency) if lat is None
+               else np.asarray(lat, np.float64))
+        link_dst = np.asarray(self.link_dst_array(), dtype=np.int64)
+
+        lt = np.zeros(n_links)
+        hop_hist: dict = {}
+        comm_cost = 0.0
+        total_bytes = 0.0
+        max_path_lat = 0.0
+        for i, j, vol in graph.edges:
+            ids = np.asarray(self.route_ids(int(placement[i]),
+                                            int(placement[j])), dtype=np.int64)
+            h = len(ids)
+            comm_cost += vol * h
+            total_bytes += vol
+            hop_hist[h] = hop_hist.get(h, 0.0) + vol
+            if h:
+                lt[ids] += vol                  # shortest routes never repeat a link
+                max_path_lat = max(max_path_lat, float(lat[ids].sum()))
+
+        core_traffic = np.bincount(link_dst, weights=lt, minlength=n)
+        comm_time = np.bincount(link_dst, weights=lt * inv_bw, minlength=n)
+        comp = np.zeros(n)
+        comp[placement] = graph.compute / self.core_flops
+        per_core = comp + comm_time
+        latency = float(per_core.max() + max_path_lat) if graph.n else 0.0
+        rows, cols = self.grid_shape
+        return NoCMetrics(
+            comm_cost=comm_cost,
+            hop_hist=hop_hist,
+            mean_hops=comm_cost / total_bytes if total_bytes else 0.0,
+            link_traffic={self.link_label(l): lt[l]
+                          for l in np.nonzero(lt)[0]},
+            core_traffic=core_traffic.reshape(rows, cols),
+            max_link=float(lt.max()) if n_links else 0.0,
+            latency=latency,
+            throughput=1.0 / latency if latency > 0 else float("inf"),
+        )
+
+    def core_comm_time(self, m: NoCMetrics) -> np.ndarray:
+        """[rows, cols] seconds each core spends serializing its incoming
+        traffic — the contention term ``deploy_model(contention_feedback=True)``
+        feeds back into per-stage schedule times."""
+        bw = self.link_bandwidth()
+        if bw is None:
+            return m.core_traffic / self.link_bw
+        wct = np.zeros(self.n_cores)
+        link_dst = self.link_dst_array()
+        for label, vol in m.link_traffic.items():
+            lid = self.link_id_of(label)
+            wct[int(link_dst[lid])] += vol / bw[lid]
+        return wct.reshape(self.grid_shape)
+
+    def interchip_bytes(self, link_traffic: dict) -> float:
+        """Total bytes crossing inter-chip links (0.0 on flat topologies)."""
+        mask = self.interchip_mask()
+        if mask is None:
+            return 0.0
+        return float(sum(vol for label, vol in link_traffic.items()
+                         if mask[self.link_id_of(label)]))
+
+    def reward(self, graph, placement: np.ndarray) -> float:
+        """Paper Eq. 4: negative total link traffic == negative comm_cost."""
+        return -self.evaluate(graph, placement).comm_cost
+
+
+class GridTopology(Topology):
+    """2D mesh/torus grid of cores — the paper's NoC, now one Topology.
+
+    Routing, metrics and tie-breaks are the historical ``NoC`` code moved here
+    verbatim: XY (row-first) dimension-ordered shortest paths, shorter-wrap
+    with clockwise tie-break on tori, and the scalar-bandwidth evaluation loop
+    — so a uniform grid stays bit-identical to the pre-refactor ``NoC``.
+    Subclasses with non-uniform links (:class:`HierarchicalMesh`) inherit the
+    routing and fall through to the generic per-link evaluator.
+    """
+
+    def __init__(self, rows: int, cols: int, torus: bool = False,
+                 link_bw: float = 1e9, core_flops: float = 1e9,
+                 hop_latency: float = 1e-8):
+        self.rows, self.cols, self.torus = rows, cols, torus
+        self.link_bw = float(link_bw)
+        self.core_flops = float(core_flops)
+        self.hop_latency = float(hop_latency)
+
+    @property
+    def n_cores(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def n_links(self) -> int:
+        return 4 * self.n_cores
+
+    @property
+    def grid_shape(self) -> tuple:
+        return (self.rows, self.cols)
+
+    def coord(self, idx: int):
+        return divmod(int(idx), self.cols)
+
+    def index(self, r: int, c: int) -> int:
+        return int(r) * self.cols + int(c)
+
+    # ---- routing -------------------------------------------------------------
+    def _steps(self, a: int, b: int, size: int):
+        """Unit steps along one dimension, shorter wrap on a torus.
+
+        Clockwise tie-break: on an even-size torus the two directions tie at
+        size/2 hops; we take the positive (clockwise) direction, as the paper's
+        clockwise search does.
+        """
+        if a == b:
+            return []
+        if not self.torus:
+            step = 1 if b > a else -1
+            return [step] * abs(b - a)
+        fwd = (b - a) % size
+        bwd = (a - b) % size
+        if fwd <= bwd:                      # clockwise tie-break
+            return [1] * fwd
+        return [-1] * bwd
+
+    def route(self, src: int, dst: int):
+        """XY (row-first) shortest path: list of ((r,c),(r',c')) unit links."""
+        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
+        links = []
+        r, c = r0, c0
+        for s in self._steps(c0, c1, self.cols):     # X first
+            c2 = (c + s) % self.cols
+            links.append(((r, c), (r, c2)))
+            c = c2
+        for s in self._steps(r0, r1, self.rows):     # then Y
+            r2 = (r + s) % self.rows
+            links.append(((r, c), (r2, c)))
+            r = r2
+        return links
+
+    def hops(self, src: int, dst: int) -> int:
+        (r0, c0), (r1, c1) = self.coord(src), self.coord(dst)
+        if not self.torus:
+            return abs(r0 - r1) + abs(c0 - c1)
+        dr = min((r1 - r0) % self.rows, (r0 - r1) % self.rows)
+        dc = min((c1 - c0) % self.cols, (c0 - c1) % self.cols)
+        return dr + dc
+
+    # ---- link-id interface ----------------------------------------------------
+    def link_id(self, a, b) -> int:
+        """Directed link ((r,c),(r',c')) -> src_core*4 + {L,R,U,D}."""
+        (r0, c0), (r1, c1) = a, b
+        src = r0 * self.cols + c0
+        if r0 == r1:
+            d = R if (c1 - c0) % self.cols == 1 else L
+        else:
+            d = D if (r1 - r0) % self.rows == 1 else U
+        return src * 4 + d
+
+    def route_ids(self, src: int, dst: int) -> list:
+        return [self.link_id(a, b) for a, b in self.route(src, dst)]
+
+    def link_label(self, lid: int):
+        src, d = divmod(int(lid), 4)
+        rr, cc = divmod(src, self.cols)
+        if d == L:
+            other = (rr, (cc - 1) % self.cols)
+        elif d == R:
+            other = (rr, (cc + 1) % self.cols)
+        elif d == U:
+            other = ((rr - 1) % self.rows, cc)
+        else:
+            other = ((rr + 1) % self.rows, cc)
+        return ((rr, cc), other)
+
+    def link_id_of(self, label) -> int:
+        return self.link_id(*label)
+
+    def link_dst_array(self) -> np.ndarray:
+        cached = getattr(self, "_link_dst", None)
+        if cached is not None:
+            return cached
+        rows, cols, n = self.rows, self.cols, self.n_cores
+        link_dst = np.empty(self.n_links, dtype=np.int32)
+        for core in range(n):
+            rr, cc = divmod(core, cols)
+            link_dst[core * 4 + L] = rr * cols + (cc - 1) % cols
+            link_dst[core * 4 + R] = rr * cols + (cc + 1) % cols
+            link_dst[core * 4 + U] = ((rr - 1) % rows) * cols + cc
+            link_dst[core * 4 + D] = ((rr + 1) % rows) * cols + cc
+        self._link_dst = link_dst
+        return link_dst
+
+    def link_src_array(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n_cores, dtype=np.int32), 4)
+
+    def cdv_in_ids(self) -> np.ndarray:
+        """[n_links] — the receiver-side cdv slot credited by each link
+        (link into core c from direction d lands in c's opposite-d slot)."""
+        link_dst = self.link_dst_array()
+        dirs = np.tile(np.arange(4, dtype=np.int64), self.n_cores)
+        opp = np.asarray(_OPP, dtype=np.int64)
+        return (link_dst.astype(np.int64) * 4 + opp[dirs]).astype(np.int32)
+
+    def hops_matrix(self) -> np.ndarray:
+        n, rows, cols = self.n_cores, self.rows, self.cols
+        idx = np.arange(n)
+        r, c = idx // cols, idx % cols
+        if self.torus:
+            dr = np.minimum((r[:, None] - r[None, :]) % rows,
+                            (r[None, :] - r[:, None]) % rows)
+            dc = np.minimum((c[:, None] - c[None, :]) % cols,
+                            (c[None, :] - c[:, None]) % cols)
+        else:
+            dr = np.abs(r[:, None] - r[None, :])
+            dc = np.abs(c[:, None] - c[None, :])
+        return (dr + dc).astype(np.int32)
+
+    def cache_key(self) -> tuple:
+        return ("grid", self.rows, self.cols, self.torus, self.link_bw,
+                self.core_flops, self.hop_latency)
+
+    def describe(self) -> dict:
+        return {"kind": "torus" if self.torus else "mesh",
+                "rows": self.rows, "cols": self.cols, "torus": self.torus,
+                "n_cores": self.n_cores}
+
+    # ---- evaluation (paper Fig 6/7/8 metrics) ---------------------------------
+    def evaluate(self, graph, placement: np.ndarray) -> NoCMetrics:
+        """Score ``placement`` (array: logical node -> physical core index).
+
+        Placement must be injective (paper Definition C: |A| <= |N|).
+        Uniform grids run the historical scalar loop (bit-identical to the
+        pre-refactor ``NoC.evaluate``); non-uniform subclasses use the generic
+        per-link evaluator of :class:`Topology`.
+        """
+        if not self.uniform_links:
+            return Topology.evaluate(self, graph, placement)
+        placement = self._check_placement(placement)
+
+        link_traffic: dict = {}
+        core_traffic = np.zeros((self.rows, self.cols))
+        hop_hist: dict = {}
+        comm_cost = 0.0
+        weighted_hops = 0.0
+        total_bytes = 0.0
+        for i, j, vol in graph.edges:
+            src, dst = placement[i], placement[j]
+            links = self.route(src, dst)
+            h = len(links)
+            comm_cost += vol * h
+            weighted_hops += vol * h
+            total_bytes += vol
+            hop_hist[h] = hop_hist.get(h, 0.0) + vol
+            for (a, b) in links:
+                link_traffic[(a, b)] = link_traffic.get((a, b), 0.0) + vol
+                core_traffic[b] += vol          # traffic arriving into router b
+
+        # Analytic latency model: a step's makespan is bounded by the slowest
+        # core (compute + its router traffic serialized on link_bw) plus the
+        # longest path's hop latency. This is the simulator abstraction the
+        # paper's latency/throughput panels (Fig 6b/6c) are built on.
+        per_core_comm = core_traffic / self.link_bw
+        comp = np.zeros(self.n_cores)
+        comp[placement] = graph.compute / self.core_flops
+        per_core = comp.reshape(self.rows, self.cols) + per_core_comm
+        max_hops = max(hop_hist) if hop_hist else 0
+        latency = float(per_core.max() + max_hops * self.hop_latency) if graph.n else 0.0
+        mean_hops = weighted_hops / total_bytes if total_bytes else 0.0
+        return NoCMetrics(
+            comm_cost=comm_cost,
+            hop_hist=hop_hist,
+            mean_hops=mean_hops,
+            link_traffic=link_traffic,
+            core_traffic=core_traffic,
+            max_link=max(link_traffic.values()) if link_traffic else 0.0,
+            latency=latency,
+            throughput=1.0 / latency if latency > 0 else float("inf"),
+        )
+
+    def directional_cdv(self, graph, placement: np.ndarray):
+        """Per-core CDV_{left,right,up,down} (paper Eq. 4 terms): bytes crossing
+        each of the four links incident to every core."""
+        m = self.evaluate(graph, placement)
+        cdv = np.zeros((self.rows, self.cols, 4))  # L, R, U, D
+        for ((r0, c0), (r1, c1)), vol in m.link_traffic.items():
+            if r0 == r1:  # horizontal
+                going_right = ((c1 - c0) % self.cols) == 1
+                if going_right:
+                    cdv[r0, c0, 1] += vol
+                    cdv[r1, c1, 0] += vol
+                else:
+                    cdv[r0, c0, 0] += vol
+                    cdv[r1, c1, 1] += vol
+            else:
+                going_down = ((r1 - r0) % self.rows) == 1
+                if going_down:
+                    cdv[r0, c0, 3] += vol
+                    cdv[r1, c1, 2] += vol
+                else:
+                    cdv[r0, c0, 2] += vol
+                    cdv[r1, c1, 3] += vol
+        return cdv
+
+
+class HierarchicalMesh(GridTopology):
+    """A ``chips_rows × chips_cols`` grid of ``core_rows × core_cols`` mesh
+    chips joined by slower, costlier inter-chip links.
+
+    Globally the cores form one ``(chips_rows·core_rows) ×
+    (chips_cols·core_cols)`` mesh with deterministic XY routing (chips expose
+    boundary-core links to their neighbours), but links that cross a chip
+    boundary carry ``interchip_bw`` / ``interchip_energy`` /
+    ``interchip_latency`` instead of the on-chip ``link_bw`` / ``e_byte_hop``
+    / ``hop_latency``. Placement optimizers therefore trade on-chip locality
+    against inter-chip crossings through the per-link latency/energy models
+    (and the ``"interchip"`` objective term), while every batched scoring
+    path — numpy, jax, pallas — applies unchanged.
+    """
+
+    def __init__(self, chips_rows: int, chips_cols: int,
+                 core_rows: int, core_cols: int,
+                 interchip_bw: float | None = None,
+                 interchip_energy: float | None = None,
+                 link_bw: float = 1e9, core_flops: float = 1e9,
+                 hop_latency: float = 1e-8, e_byte_hop: float = 1e-11,
+                 interchip_latency: float | None = None):
+        super().__init__(chips_rows * core_rows, chips_cols * core_cols,
+                         torus=False, link_bw=link_bw, core_flops=core_flops,
+                         hop_latency=hop_latency)
+        if min(chips_rows, chips_cols, core_rows, core_cols) < 1:
+            raise ValueError("chip grid and per-chip core grid must be >= 1x1")
+        self.chips_rows, self.chips_cols = int(chips_rows), int(chips_cols)
+        self.core_rows, self.core_cols = int(core_rows), int(core_cols)
+        self.e_byte_hop = float(e_byte_hop)
+        self.interchip_bw = float(interchip_bw if interchip_bw is not None
+                                  else link_bw / 8.0)
+        self.interchip_energy = float(interchip_energy
+                                      if interchip_energy is not None
+                                      else 8.0 * self.e_byte_hop)
+        self.interchip_latency = float(interchip_latency
+                                       if interchip_latency is not None
+                                       else 4.0 * hop_latency)
+
+        # Per-link attribute arrays: a link is inter-chip when its endpoint
+        # cores live on different chips. (Mesh wrap link ids exist in the
+        # core*4+dir id space but are never routed; their attributes are
+        # irrelevant and their traffic is always zero.)
+        src = self.link_src_array().astype(np.int64)
+        dst = self.link_dst_array().astype(np.int64)
+        chip = ((src // self.cols) // core_rows * self.chips_cols
+                + (src % self.cols) // core_cols)
+        chip_d = ((dst // self.cols) // core_rows * self.chips_cols
+                  + (dst % self.cols) // core_cols)
+        self._interchip = chip != chip_d
+        self._bw = np.where(self._interchip, self.interchip_bw, self.link_bw)
+        self._lat = np.where(self._interchip, self.interchip_latency,
+                             self.hop_latency)
+        self._energy = np.where(self._interchip, self.interchip_energy,
+                                self.e_byte_hop)
+
+    @property
+    def n_chips(self) -> int:
+        return self.chips_rows * self.chips_cols
+
+    def chip_of(self, core: int) -> int:
+        """Flat chip index of a core (row-major over the chip grid)."""
+        r, c = self.coord(core)
+        return (r // self.core_rows) * self.chips_cols + c // self.core_cols
+
+    def link_bandwidth(self):
+        return self._bw
+
+    def link_latency(self):
+        return self._lat
+
+    def link_energy_per_byte(self):
+        return self._energy
+
+    def interchip_mask(self):
+        return self._interchip
+
+    def cache_key(self) -> tuple:
+        return ("hier", self.chips_rows, self.chips_cols, self.core_rows,
+                self.core_cols, self.link_bw, self.interchip_bw,
+                self.core_flops, self.hop_latency, self.interchip_latency,
+                self.e_byte_hop, self.interchip_energy)
+
+    def describe(self) -> dict:
+        return {"kind": "hier", "rows": self.rows, "cols": self.cols,
+                "n_cores": self.n_cores,
+                "chips": [self.chips_rows, self.chips_cols],
+                "chip_cores": [self.core_rows, self.core_cols],
+                "link_bw": self.link_bw, "interchip_bw": self.interchip_bw,
+                "e_byte_hop": self.e_byte_hop,
+                "interchip_energy": self.interchip_energy,
+                "interchip_latency": self.interchip_latency}
+
+
+# ---------------------------------------------------------------------------
+# --topology spec grammar
+# ---------------------------------------------------------------------------
+
+#: parse_topology kinds -> required grid segments
+TOPOLOGY_KINDS = ("mesh", "torus", "hier")
+
+_PARAM_ALIASES = {
+    "bw": "link_bw", "link_bw": "link_bw",
+    "flops": "core_flops", "core_flops": "core_flops",
+    "lat": "hop_latency", "hop_latency": "hop_latency",
+    "ibw": "interchip_bw", "interchip_bw": "interchip_bw",
+    "ien": "interchip_energy", "interchip_energy": "interchip_energy",
+    "ilat": "interchip_latency", "interchip_latency": "interchip_latency",
+    "e": "e_byte_hop", "e_byte_hop": "e_byte_hop",
+}
+
+
+def _parse_grid(seg: str, spec: str) -> tuple:
+    parts = seg.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"bad grid {seg!r} in topology spec {spec!r} "
+                         "(want RxC, e.g. 4x8)")
+    try:
+        r, c = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(f"bad grid {seg!r} in topology spec {spec!r}") from None
+    if r < 1 or c < 1:
+        raise ValueError(f"grid {seg!r} must be >= 1x1 in {spec!r}")
+    return r, c
+
+
+def parse_topology(spec: str, link_bw: float = 1e9, core_flops: float = 1e9,
+                   hop_latency: float = 1e-8) -> Topology:
+    """Parse a ``--topology`` spec string into a :class:`Topology`.
+
+    Grammar (``,key=value`` pairs optional, applied last)::
+
+        mesh:RxC               flat R x C mesh           -> NoC(R, C)
+        torus:RxC              flat R x C torus          -> NoC(R, C, torus=True)
+        hier:CRxCC:KRxKC       CRxCC chips of KRxKC cores -> HierarchicalMesh
+
+    Recognized keys: ``bw``/``link_bw``, ``flops``/``core_flops``,
+    ``lat``/``hop_latency``, and for ``hier`` additionally ``ibw``
+    (interchip_bw), ``ien`` (interchip_energy), ``ilat`` (interchip_latency),
+    ``e`` (on-chip e_byte_hop). The ``link_bw``/``core_flops``/``hop_latency``
+    arguments are the caller's platform defaults, overridable per spec.
+    """
+    from .noc import NoC        # noc imports this module; resolve lazily
+
+    head, *params = str(spec).strip().split(",")
+    segs = head.split(":")
+    kind = segs[0].strip().lower()
+    if kind not in TOPOLOGY_KINDS:
+        raise ValueError(f"unknown topology kind {kind!r} in {spec!r}; "
+                         f"choose from {TOPOLOGY_KINDS}")
+    kw = {"link_bw": link_bw, "core_flops": core_flops,
+          "hop_latency": hop_latency}
+    for p in params:
+        if not p.strip():
+            continue
+        if "=" not in p:
+            raise ValueError(f"bad parameter {p!r} in topology spec {spec!r} "
+                             "(want key=value)")
+        k, v = p.split("=", 1)
+        key = _PARAM_ALIASES.get(k.strip().lower())
+        if key is None:
+            raise ValueError(f"unknown topology parameter {k.strip()!r} in "
+                             f"{spec!r}; choose from {sorted(set(_PARAM_ALIASES))}")
+        kw[key] = float(v)
+
+    if kind in ("mesh", "torus"):
+        if len(segs) != 2:
+            raise ValueError(f"{kind} spec needs one grid: {kind}:RxC "
+                             f"(got {spec!r})")
+        bad = [k for k in kw if k.startswith("interchip") or k == "e_byte_hop"]
+        if bad:
+            raise ValueError(f"parameters {bad} only apply to hier topologies "
+                             f"({spec!r})")
+        r, c = _parse_grid(segs[1], spec)
+        return NoC(r, c, torus=(kind == "torus"), **kw)
+
+    if len(segs) != 3:
+        raise ValueError("hier spec needs chip and core grids: "
+                         f"hier:CRxCC:KRxKC (got {spec!r})")
+    cr, cc = _parse_grid(segs[1], spec)
+    kr, kc = _parse_grid(segs[2], spec)
+    return HierarchicalMesh(cr, cc, kr, kc, **kw)

@@ -29,6 +29,7 @@ import numpy as np
 
 from .graph import LogicalGraph
 from .noc import NoC
+from .topology import HierarchicalMesh
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
@@ -215,6 +216,27 @@ def traffic_from_hlo(hlo_text: str, mesh_shape, axis_names) -> LogicalGraph:
 def pod_noc(rows: int = 16, cols: int = 16, link_bw: float = 50e9) -> NoC:
     """v5e pod: 2D torus, ~50 GB/s per ICI link."""
     return NoC(rows, cols, torus=True, link_bw=link_bw, core_flops=197e12)
+
+
+def multislice_pod(slice_grid=(2, 2), slice_shape=(8, 8),
+                   ici_bw: float = 50e9, dcn_bw: float = 6.25e9,
+                   dcn_latency: float = 1e-5,
+                   core_flops: float = 197e12) -> HierarchicalMesh:
+    """Multi-slice deployment: a grid of ICI-mesh slices joined by DCN.
+
+    Each slice is a ``slice_shape`` chip mesh with ~50 GB/s ICI links; slices
+    are tiled ``slice_grid`` and stitched by data-center network links (~an
+    order of magnitude slower, much higher latency) — the
+    :class:`repro.core.topology.HierarchicalMesh` inter-chip link class.
+    ``optimize_device_order`` runs on it unchanged, so device orderings can be
+    searched to keep heavy collectives inside a slice (cf. the ``"interchip"``
+    objective term of :mod:`repro.deploy.objective`).
+    """
+    return HierarchicalMesh(slice_grid[0], slice_grid[1],
+                            slice_shape[0], slice_shape[1],
+                            interchip_bw=dcn_bw, link_bw=ici_bw,
+                            core_flops=core_flops, hop_latency=1e-6,
+                            interchip_latency=dcn_latency)
 
 
 def default_assignment(n_devices: int) -> np.ndarray:

@@ -1,10 +1,11 @@
 """``python -m repro.deploy`` / ``repro-deploy``: end-to-end deployment sweeps.
 
 Sweeps models × methods × objectives through :func:`repro.deploy.deploy_model`
-on one NoC topology and prints a CSV-ish table (one row per deployment) with
-the paper's metrics plus per-stage wall times. ``--json`` stores the full
-:meth:`DeploymentPlan.report` dicts; ``--smoke`` runs a seconds-scale sweep so
-CI keeps the whole flow from bitrotting.
+on one topology (``--cores/--torus`` flat grids, or any ``--topology`` spec —
+multi-chip ``hier:...`` meshes included) and prints a CSV-ish table (one row
+per deployment) with the paper's metrics plus per-stage wall times. ``--json``
+stores the full :meth:`DeploymentPlan.report` dicts; ``--smoke`` runs a
+seconds-scale sweep so CI keeps the whole flow from bitrotting.
 
 Examples::
 
@@ -12,6 +13,9 @@ Examples::
     PYTHONPATH=src python -m repro.deploy --models spike_vgg16 \\
         --methods zigzag,simulated_annealing --objectives comm_cost,max_link \\
         --cores 32 --budget 2000 --json results/deploy_sweep.json
+    PYTHONPATH=src python -m repro.deploy --topology hier:2x2:4x4,ibw=1e9 \\
+        --methods sigmate,genetic --objectives comm_cost,energy \\
+        --contention-feedback
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import json
 import os
 
 from ..core.noc import NoC
+from ..core.topology import parse_topology
 from ..snn import spike_resnet18, spike_resnet50, spike_vgg16
 from .engine import SCHEDULES, deploy_model
 from .objective import OBJECTIVES
@@ -66,6 +71,15 @@ def main(argv=None) -> int:
     ap.add_argument("--cores", type=int, default=32,
                     help=f"NoC size; known grids: {sorted(GRIDS)}")
     ap.add_argument("--torus", action="store_true")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="explicit topology spec overriding --cores/--torus: "
+                         "mesh:RxC | torus:RxC | hier:CRxCC:KRxKC"
+                         "[,ibw=...,ien=...,ilat=...] "
+                         "(see repro.core.topology.parse_topology)")
+    ap.add_argument("--contention-feedback", action="store_true",
+                    help="inflate per-stage schedule times with the placed "
+                         "NoC contention (closes the placement->schedule "
+                         "loop)")
     ap.add_argument("--strategy", default="balanced",
                     choices=("compute", "storage", "balanced"))
     ap.add_argument("--schedule", default="fpdeep", choices=SCHEDULES)
@@ -93,11 +107,18 @@ def main(argv=None) -> int:
         objectives = args.objectives.split(",")
         cores, budget, units = args.cores, args.budget, args.units
 
-    if cores not in GRIDS:
-        ap.error(f"--cores must be one of {sorted(GRIDS)}")
-    rows, cols = GRIDS[cores]
-    noc = NoC(rows, cols, torus=args.torus, link_bw=8e9, core_flops=25.6e9,
-              hop_latency=2e-8)
+    if args.topology is not None:
+        try:
+            noc = parse_topology(args.topology, link_bw=8e9,
+                                 core_flops=25.6e9, hop_latency=2e-8)
+        except ValueError as e:
+            ap.error(str(e))
+    else:
+        if cores not in GRIDS:
+            ap.error(f"--cores must be one of {sorted(GRIDS)}")
+        rows, cols = GRIDS[cores]
+        noc = NoC(rows, cols, torus=args.torus, link_bw=8e9,
+                  core_flops=25.6e9, hop_latency=2e-8)
 
     for model_name in models:            # fail on typos before any sweep runs
         if model_name not in MODELS:
@@ -112,7 +133,8 @@ def main(argv=None) -> int:
                 plan = deploy_model(
                     cfg, noc, partition_strategy=args.strategy, method=method,
                     objective=objective, schedule=args.schedule, n_units=units,
-                    seed=args.seed, budget=budget, backend=args.backend)
+                    seed=args.seed, budget=budget, backend=args.backend,
+                    contention_feedback=args.contention_feedback)
                 reports.append(plan.report())
                 print(_csv(_row(plan)))
 

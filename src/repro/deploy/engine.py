@@ -38,7 +38,7 @@ SCHEDULES = ("layerwise", "fpdeep", "one_f_one_b", "none")
 class DeploymentPlan:
     """Everything the deployment flow produced, stage by stage."""
     model: str
-    noc: object                      # repro.core.NoC
+    noc: object                      # repro.core.topology.Topology
     profiles: list                   # [LayerProfile]
     partition: Partition
     graph: object                    # LogicalGraph the placer consumed
@@ -47,6 +47,7 @@ class DeploymentPlan:
     schedule: object                 # pipeline.Schedule | None
     n_units: int
     stage_times_s: dict              # {"profile"|"partition"|"place"|"schedule": s}
+    contention_feedback: bool = False
 
     def report(self) -> dict:
         """JSON-able summary (what the CLI/benchmark sweeps emit)."""
@@ -58,11 +59,11 @@ class DeploymentPlan:
                 "n_units": self.n_units,
                 "makespan_s": float(self.schedule.makespan),
                 "mean_utilization": float(self.schedule.mean_utilization()),
+                "contention_feedback": self.contention_feedback,
             }
         return {
             "model": self.model,
-            "noc": {"rows": self.noc.rows, "cols": self.noc.cols,
-                    "torus": self.noc.torus},
+            "noc": self.noc.describe(),
             "partition": {"strategy": self.partition.strategy,
                           "n_slices": self.partition.n,
                           "imbalance": float(self.partition.imbalance())},
@@ -92,11 +93,10 @@ def _profiles(model, batch: int, training: bool, spike_density: float):
     return f"profiled[{len(layers)}]", layers
 
 
-def _schedule(partition: Partition, schedule: str, n_units: int,
+def _schedule(times, schedule: str, n_units: int,
               bwd_ratio: float, training: bool):
     if schedule == "none":
         return None
-    times = [s.latency(partition.core) for s in partition.slices]
     if schedule == "layerwise":
         return pipeline.layerwise(times, n_units, bwd_ratio, training)
     if schedule == "fpdeep":
@@ -115,13 +115,24 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
                  spike_density: float = 0.15, core: CoreSpec = CoreSpec(),
                  seed: int = 0, budget: int | None = None,
                  backend: str | None = None, bwd_ratio: float = 2.0,
+                 contention_feedback: bool = False,
                  **method_kw) -> DeploymentPlan:
     """Run the full deployment flow of ``model`` onto ``noc``.
 
     ``model`` is an :class:`repro.snn.SNNConfig` (profiled here) or a
-    pre-built ``list[LayerProfile]``. ``method``/``objective``/``backend``/
-    ``budget``/``method_kw`` go to :func:`optimize_placement`; ``schedule`` is
-    one of :data:`SCHEDULES` ("none" skips the scheduling stage).
+    pre-built ``list[LayerProfile]``. ``noc`` is any
+    :class:`repro.core.topology.Topology` (flat ``NoC`` or a multi-chip
+    ``HierarchicalMesh`` — the ``--topology`` CLI spec parses to one).
+    ``method``/``objective``/``backend``/``budget``/``method_kw`` go to
+    :func:`optimize_placement`; ``schedule`` is one of :data:`SCHEDULES`
+    ("none" skips the scheduling stage).
+
+    ``contention_feedback=True`` closes the placement→schedule loop: each
+    slice's analytic latency is inflated by the time its *placed* core spends
+    serializing the NoC traffic routed through it (the per-core contention of
+    the placement's NoC evaluation, per-link-bandwidth aware) before the
+    pipeline schedule is built. Stage times only grow, so the resulting
+    makespan is never optimistically below the analytic path.
     """
     # placement sits beside deploy in the layering (core.placement imports
     # deploy.objective at module scope) — resolve it at call time
@@ -146,11 +157,21 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
                                 budget=budget, backend=backend,
                                 objective=objective, **method_kw)
     t3 = time.perf_counter()
-    sched = _schedule(part, schedule, n_units, bwd_ratio, training)
+    times = [s.latency(part.core) for s in part.slices]
+    if contention_feedback and schedule != "none":
+        # placed NoC contention: seconds each core spends serializing the
+        # traffic routed through it, added to the slice it hosts (contention
+        # is nonnegative, so makespan can only grow vs the analytic path)
+        comm_t = noc.core_comm_time(noc.evaluate(graph, result.placement))
+        flat = np.asarray(comm_t, dtype=float).reshape(-1)
+        times = [t + float(flat[int(p)])
+                 for t, p in zip(times, result.placement)]
+    sched = _schedule(times, schedule, n_units, bwd_ratio, training)
     t4 = time.perf_counter()
     return DeploymentPlan(
         model=name, noc=noc, profiles=profiles, partition=part, graph=graph,
         placement=result, schedule_name=schedule, schedule=sched,
         n_units=n_units,
         stage_times_s={"profile": t1 - t0, "partition": t2 - t1,
-                       "place": t3 - t2, "schedule": t4 - t3})
+                       "place": t3 - t2, "schedule": t4 - t3},
+        contention_feedback=contention_feedback and schedule != "none")

@@ -13,12 +13,18 @@ Base metric terms (all per placement, lower is better):
 
 * ``comm_cost``  — Σ bytes × hops (the Eq. 4 CDV objective; the default).
 * ``max_link``   — hottest directed link's bytes (hotspot peak, Fig 7).
-* ``latency``    — the analytic makespan estimate of the NoC model.
+* ``latency``    — the analytic makespan estimate of the NoC model (per-link
+  bandwidth/latency aware on non-uniform topologies).
 * ``mean_hops``  — traffic-weighted mean hop distance.
-* ``energy``     — analytic energy per step from the hop/link model:
-  dynamic link+router energy (``e_byte_hop × comm_cost``) plus static leakage
-  integrated over the step (``p_core_static × n_cores × latency``), see
-  :class:`EnergyModel`.
+* ``energy``     — analytic energy per step from the hop/link model: dynamic
+  link+router energy plus static leakage integrated over the step
+  (``p_core_static × n_cores × latency``), see :class:`EnergyModel`. When the
+  topology carries per-link ``energy_per_byte`` attributes (e.g.
+  :class:`repro.core.topology.HierarchicalMesh` inter-chip links), the dynamic
+  term is Σ link_traffic × that link's J/byte; on flat topologies it is the
+  historical scalar ``e_byte_hop × comm_cost`` (bit-identical).
+* ``interchip``  — bytes crossing inter-chip links (0 on flat topologies);
+  lets multi-chip searches penalize boundary crossings directly.
 
 An objective spec (accepted everywhere an ``objective=`` parameter exists) is
 a name from :data:`OBJECTIVES`, a ``{metric: weight}`` dict for weighted
@@ -53,9 +59,24 @@ class EnergyModel:
         return (self.e_byte_hop * comm_cost
                 + self.p_core_static * n_cores * latency)
 
+    def energy_from_links(self, dynamic, latency, n_cores: int):
+        """Energy with the dynamic term already summed from per-link
+        ``energy_per_byte`` attributes (non-uniform topologies)."""
+        return dynamic + self.p_core_static * n_cores * latency
+
 
 #: Metric names an Objective term may reference.
-METRIC_TERMS = ("comm_cost", "max_link", "latency", "mean_hops", "energy")
+METRIC_TERMS = ("comm_cost", "max_link", "latency", "mean_hops", "energy",
+                "interchip")
+
+
+def _link_dot(link_traffic, weights, topo):
+    """Σ link_traffic × weights — over a reference ``NoCMetrics`` dict
+    (label-keyed) or a batched ``[B, n_links]`` array."""
+    if isinstance(link_traffic, dict):
+        return float(sum(vol * weights[topo.link_id_of(label)]
+                         for label, vol in link_traffic.items()))
+    return link_traffic @ np.asarray(weights, np.float64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,16 +107,27 @@ class Objective:
         gather-only path instead of a full metrics evaluation)."""
         return self.terms == (("comm_cost", 1.0),)
 
-    def _term_value(self, metric: str, m, n_cores: int):
+    def _term_value(self, metric: str, m, noc):
         if metric == "energy":
-            return self.energy_model.energy(m.comm_cost, m.latency, n_cores)
+            eb = noc.link_energy_per_byte()
+            if eb is None:
+                return self.energy_model.energy(m.comm_cost, m.latency,
+                                                noc.n_cores)
+            return self.energy_model.energy_from_links(
+                _link_dot(m.link_traffic, eb, noc), m.latency, noc.n_cores)
+        if metric == "interchip":
+            mask = noc.interchip_mask()
+            if mask is None:
+                return m.comm_cost * 0.0        # flat chip: no crossings
+            return _link_dot(m.link_traffic, mask.astype(np.float64), noc)
         return getattr(m, metric)
 
     def from_metrics(self, m, noc) -> float:
-        """Scalar score from a reference :class:`repro.core.noc.NoCMetrics`."""
+        """Scalar score from a reference
+        :class:`repro.core.topology.NoCMetrics`."""
         total = 0.0
         for metric, weight in self.terms:
-            total += weight * self._term_value(metric, m, noc.n_cores)
+            total += weight * self._term_value(metric, m, noc)
         return float(total)
 
     def from_batch(self, m: nb.BatchMetrics, noc) -> np.ndarray:
@@ -103,7 +135,7 @@ class Objective:
         total = np.zeros(m.comm_cost.shape[0])
         for metric, weight in self.terms:
             total += weight * np.asarray(
-                self._term_value(metric, m, noc.n_cores), np.float64)
+                self._term_value(metric, m, noc), np.float64)
         return total
 
 
@@ -137,13 +169,19 @@ def as_objective(spec) -> Objective:
                     f"got {type(spec).__name__}")
 
 
-def objective_scorer(noc, graph, objective, backend: str = "batch"):
+def objective_scorer(noc, graph, objective, backend: str = "batch",
+                     fused: bool = True):
     """``placements [B, n] -> scores [B]`` under ``objective``.
 
     The comm-cost objective delegates to :func:`repro.core.noc_batch.make_scorer`
-    (the bit-identical historical path). Anything else runs the full batched
-    metrics evaluation and combines terms; same no-per-call-validation contract
-    as ``make_scorer`` (validate user input once via ``validate_placements``).
+    (the bit-identical historical path). On the jax/pallas backends any other
+    objective compiles to one fused device dispatch
+    (:meth:`repro.core.noc_batch.BatchedNoC.make_fused_scorer`) that never
+    materializes the full :class:`~repro.core.noc_batch.BatchMetrics`
+    (``fused=False`` forces the generic evaluate-then-combine path, kept for
+    benchmarking). The numpy backends run the full batched metrics evaluation
+    and combine terms; same no-per-call-validation contract as
+    ``make_scorer`` (validate user input once via ``validate_placements``).
     """
     obj = as_objective(objective)
     if obj.is_comm_cost:
@@ -159,6 +197,12 @@ def objective_scorer(noc, graph, objective, backend: str = "batch"):
         return score_ref
 
     b = nb.batched_noc(noc)
+    if fused and b._resolve(backend) in ("jax", "pallas"):
+        em = obj.energy_model
+        return b.make_fused_scorer(graph, obj.terms,
+                                   e_byte_hop=em.e_byte_hop,
+                                   p_core_static=em.p_core_static,
+                                   backend=backend)
 
     def score(placements):
         P = np.asarray(placements, dtype=np.int64)

@@ -241,6 +241,31 @@ def test_deploy_model_objective_flows_to_report():
     assert rep["objective_cost"] == rep["max_link"]
 
 
+def test_contention_feedback_closes_placement_schedule_loop():
+    """contention_feedback=True inflates per-stage times with the placed NoC
+    contention; the makespan can only grow vs the analytic path."""
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    noc = NoC(4, 4, link_bw=8e9, core_flops=25.6e9)
+    for sched in ("fpdeep", "layerwise", "one_f_one_b"):
+        base = deploy_model(cfg, noc, method="zigzag", schedule=sched,
+                            n_units=4)
+        fb = deploy_model(cfg, noc, method="zigzag", schedule=sched,
+                          n_units=4, contention_feedback=True)
+        assert fb.schedule.makespan >= base.schedule.makespan
+        assert fb.report()["schedule"]["contention_feedback"] is True
+        assert base.report()["schedule"]["contention_feedback"] is False
+    # fpdeep actually carries traffic -> strictly slower, not just equal
+    base = deploy_model(cfg, noc, method="zigzag", schedule="fpdeep",
+                        n_units=4)
+    fb = deploy_model(cfg, noc, method="zigzag", schedule="fpdeep",
+                      n_units=4, contention_feedback=True)
+    assert fb.schedule.makespan > base.schedule.makespan
+    # the flag is a no-op (and not reported) without a schedule stage
+    none = deploy_model(cfg, noc, method="zigzag", schedule="none",
+                        contention_feedback=True)
+    assert none.contention_feedback is False
+
+
 def test_deploy_model_rejects_bad_inputs():
     cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
     noc = NoC(4, 4)

@@ -1,0 +1,80 @@
+"""The ``repro-deploy`` CLI: sweep-spec parsing, --smoke, JSON round-trip.
+
+Previously only exercised by CI (never asserted); these tests pin the CSV
+contract, the report JSON shape, and the ``--topology`` spec handling.
+"""
+import json
+
+import pytest
+
+from repro.deploy.cli import COLUMNS, main
+
+
+def _rows(capsys):
+    out = capsys.readouterr().out.strip().splitlines()
+    data = [line for line in out if not line.startswith("#")]
+    return data[0], data[1:]
+
+
+def test_smoke_and_json_roundtrip(tmp_path, capsys):
+    path = tmp_path / "reports.json"
+    assert main(["--smoke", "--json", str(path)]) == 0
+    header, rows = _rows(capsys)
+    assert header == ",".join(COLUMNS)
+    assert len(rows) == 6                       # 1 model x 3 methods x 2 objs
+    with open(path) as f:
+        reports = json.load(f)
+    assert len(reports) == len(rows)
+    for rep, row in zip(reports, rows):
+        cells = row.split(",")
+        assert rep["model"] == cells[0]
+        assert rep["placement"]["method"] == cells[1]
+        assert rep["placement"]["objective"] == cells[2]
+        # the printed cells are formatted views of the stored floats
+        assert float(cells[3]) == pytest.approx(
+            rep["placement"]["objective_cost"], rel=1e-3)
+        assert rep["noc"]["kind"] == "mesh"
+        assert rep["schedule"]["makespan_s"] > 0
+    # reports round-trip losslessly through JSON
+    assert json.loads(json.dumps(reports)) == reports
+
+
+def test_explicit_sweep_spec(capsys):
+    assert main(["--models", "spike_resnet18",
+                 "--methods", "zigzag,sigmate",
+                 "--objectives", "comm_cost,max_link",
+                 "--cores", "16", "--schedule", "none"]) == 0
+    _, rows = _rows(capsys)
+    assert len(rows) == 4                       # 2 methods x 2 objectives
+    assert [r.split(",")[1] for r in rows] == ["zigzag", "zigzag",
+                                               "sigmate", "sigmate"]
+    assert {r.split(",")[2] for r in rows} == {"comm_cost", "max_link"}
+    # schedule "none": makespan/util columns are dashes
+    assert all(r.split(",")[7] == "-" and r.split(",")[8] == "-"
+               for r in rows)
+
+
+def test_topology_spec_and_contention(tmp_path, capsys):
+    path = tmp_path / "hier.json"
+    assert main(["--models", "spike_resnet18", "--methods", "zigzag",
+                 "--objectives", "comm_cost",
+                 "--topology", "hier:2x2:2x2,ibw=1e9",
+                 "--units", "4", "--contention-feedback",
+                 "--json", str(path)]) == 0
+    with open(path) as f:
+        (rep,) = json.load(f)
+    assert rep["noc"]["kind"] == "hier"
+    assert rep["noc"]["chips"] == [2, 2]
+    assert rep["noc"]["interchip_bw"] == 1e9
+    assert rep["schedule"]["contention_feedback"] is True
+
+
+@pytest.mark.parametrize("argv", [
+    ["--cores", "33"],                            # unknown grid
+    ["--models", "nope"],                         # unknown model
+    ["--topology", "bogus:4x4"],                  # bad topology kind
+    ["--topology", "hier:2x2"],                   # missing core grid
+])
+def test_cli_rejects_bad_specs(argv):
+    with pytest.raises(SystemExit):
+        main(argv)
