@@ -1,4 +1,5 @@
 """Shared benchmark helpers: the paper's experimental setup in one place."""
+import json
 import os
 import sys
 import time
@@ -56,6 +57,23 @@ def placement_suite(graph, noc, methods=("zigzag", "sigmate", "random_search",
             kw["budget"] = 4000
         rows[m] = optimize_placement(graph, noc, method=m, seed=seed, **kw)
     return rows
+
+
+def write_record(record, json_path, smoke: bool, default_name: str):
+    """Write a benchmark's JSON record under the shared output protocol:
+    an explicit ``json_path`` always wins (the regression gate's fresh-smoke
+    records), full runs default to ``results/<default_name>``, and smoke runs
+    without an explicit path write nothing. Returns the written path or
+    None."""
+    out = json_path
+    if out is None and not smoke:
+        out = os.path.join(RESULTS_DIR, default_name)
+    if out is None:
+        return None
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    return out
 
 
 def bench_time(fn, repeats: int = 1) -> float:

@@ -1,0 +1,135 @@
+"""Benchmark: chip-aware partitioning (partition→topology co-design).
+
+PR 4 made multi-chip ``HierarchicalMesh`` systems first-class, but
+``partition_model`` stayed chip-oblivious: slice boundaries routinely straddle
+chips and the placement optimizer burns inter-chip bandwidth fixing a
+partition-time mistake. This benchmark measures the tentpole fix: the
+``strategy="chip"`` two-level flow (contiguous layer-unit → chip DP allocation
+minimizing cut activation bytes within a latency band, then the balanced
+compute+storage refinement within each chip) against the chip-oblivious
+``balanced`` baseline, same placement method / budget / seed, on 2×2 and 3×3
+chip grids — plus the ``chip_balanced`` (balance-first) variant and a
+``copartition_iters`` co-design round that feeds placed interchip traffic
+back into the chip allocation.
+
+Per case it records:
+
+* ``interchip_bytes``  — bytes crossing inter-chip links of the *placed*
+  deployment (the quantity the slow links make expensive);
+* ``partition_cut_bytes`` — the partition-induced lower bound (0 for the
+  chip-oblivious baseline, which makes no commitment);
+* ``comm_cost`` / ``max_link`` / ``imbalance`` and the schedule ``makespan_s``
+  (contention-feedback aware, so interchip serialization shows up in it);
+* per-stage wall times.
+
+Acceptance (ISSUE 5): on the ``hier:2x2:4x4`` system, ``strategy="chip"``
+crosses strictly fewer inter-chip bytes than the chip-oblivious balanced
+partition at no worse makespan. The emitted
+``results/BENCH_copartition.json`` carries an ``acceptance`` block asserting
+both. ``--smoke`` runs a seconds-scale subset (tiny chips/budgets); with
+``--json PATH`` the record is written there (the CI regression gate compares
+it against the committed smoke baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from .common import SPIKE_MODELS, write_record  # also sets up sys.path to src
+from repro.core.topology import HierarchicalMesh
+from repro.deploy import deploy_model
+
+STRATEGIES = ("balanced", "chip", "chip_balanced")
+
+
+def _case(model_cfg, hm, strategy, budget, pop, copartition_iters=0):
+    plan = deploy_model(model_cfg, hm, partition_strategy=strategy,
+                        method="genetic", budget=budget, pop_size=pop,
+                        seed=0, schedule="fpdeep", n_units=8,
+                        contention_feedback=True,
+                        copartition_iters=copartition_iters)
+    m = hm.evaluate(plan.graph, plan.placement.placement)
+    rep = plan.report()
+    return {
+        "strategy": strategy,
+        "copartition_iters": plan.copartition_iters,
+        "interchip_bytes": float(hm.interchip_bytes(m.link_traffic)),
+        "partition_cut_bytes": float(plan.graph.chip_cut_bytes()),
+        "comm_cost": float(plan.placement.comm_cost),
+        "max_link": float(plan.placement.max_link),
+        "imbalance": rep["partition"]["imbalance"],
+        "makespan_s": rep["schedule"]["makespan_s"],
+        "place_s": rep["stage_times_s"]["place"],
+        "partition_s": rep["stage_times_s"]["partition"],
+    }
+
+
+def copartition(smoke: bool = False, json_path: str | None = None):
+    # interchip_bw = link_bw/16: off-package links (SerDes-class) against the
+    # on-chip NoC — the bandwidth regime that makes partition-time chip cuts
+    # the quantity worth optimizing (the paper's near-storage premise)
+    plat = dict(link_bw=8e9, core_flops=25.6e9, hop_latency=2e-8,
+                interchip_bw=5e8)
+    if smoke:
+        grids = [("2x2", HierarchicalMesh(2, 2, 2, 2, **plat))]
+        model, budget, pop = "S-ResNet18", 240, 16
+    else:
+        grids = [("2x2", HierarchicalMesh(2, 2, 4, 4, **plat)),
+                 ("3x3", HierarchicalMesh(3, 3, 4, 4, **plat))]
+        model, budget, pop = "S-VGG16", 2048, 64
+    model_cfg = SPIKE_MODELS[model]()
+
+    record = {"smoke": smoke, "model": model, "budget": budget, "grids": []}
+    rows_out = []
+    by_grid = {}
+    for tag, hm in grids:
+        cases = [_case(model_cfg, hm, s, budget, pop) for s in STRATEGIES]
+        cases.append({**_case(model_cfg, hm, "chip", budget, pop,
+                              copartition_iters=2),
+                      "strategy": "chip+copart"})
+        by_grid[tag] = {c["strategy"]: c for c in cases}
+        record["grids"].append({"grid": tag, "topology": hm.describe(),
+                                "cases": cases})
+        for c in cases:
+            rows_out.append((
+                f"copartition.{tag}.{c['strategy']}",
+                c["place_s"] * 1e6,
+                f"interchip={c['interchip_bytes']:.3e} "
+                f"cut={c['partition_cut_bytes']:.3e} "
+                f"comm={c['comm_cost']:.3e} "
+                f"makespan={c['makespan_s'] * 1e3:.2f}ms"))
+
+    head = by_grid[grids[0][0]]
+    acceptance = {
+        "chip_fewer_interchip_bytes":
+            head["chip"]["interchip_bytes"] < head["balanced"]["interchip_bytes"],
+        "chip_makespan_no_worse":
+            head["chip"]["makespan_s"] <= head["balanced"]["makespan_s"] * (1 + 1e-9),
+        "interchip_reduction":
+            1.0 - head["chip"]["interchip_bytes"]
+            / max(head["balanced"]["interchip_bytes"], 1e-30),
+    }
+    record["acceptance"] = acceptance
+    rows_out.append((
+        "copartition.acceptance", 0.0,
+        f"chip<balanced_interchip={acceptance['chip_fewer_interchip_bytes']} "
+        f"makespan_no_worse={acceptance['chip_makespan_no_worse']} "
+        f"reduction={acceptance['interchip_reduction']:.1%}"))
+
+    out = write_record(record, json_path, smoke, "BENCH_copartition.json")
+    if out:
+        rows_out.append(("copartition.json", 0.0,
+                         f"wrote {os.path.relpath(out)}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI subset (tiny chips/budgets)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
+    args = ap.parse_args()
+    for name, us, derived in copartition(smoke=args.smoke,
+                                         json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

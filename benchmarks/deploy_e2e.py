@@ -11,12 +11,11 @@ combo. Emits ``results/BENCH_deploy_e2e.json`` and run.py CSV rows;
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import numpy as np
 
-from .common import RESULTS_DIR, SPIKE_MODELS, make_noc
+from .common import SPIKE_MODELS, make_noc, write_record
 
 from repro.core.placement.ppo import PPOConfig  # noqa: E402
 from repro.deploy import deploy_model  # noqa: E402
@@ -35,7 +34,7 @@ def _case(model_name, model_cfg, noc, method, objective, budget=None, **kw):
     return plan, rep
 
 
-def deploy_e2e(smoke: bool = False):
+def deploy_e2e(smoke: bool = False, json_path: str | None = None):
     if smoke:
         models = ["S-ResNet18"]
         methods = [("zigzag", {}), ("random_search", {"budget": 64})]
@@ -95,11 +94,8 @@ def deploy_e2e(smoke: bool = False):
         f"max_link obj cuts peak link x{reduction:.2f} vs comm optimum "
         f"(placements_differ={placements_differ})"))
 
-    if not smoke:
-        os.makedirs(RESULTS_DIR, exist_ok=True)
-        out = os.path.join(RESULTS_DIR, "BENCH_deploy_e2e.json")
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
+    out = write_record(record, json_path, smoke, "BENCH_deploy_e2e.json")
+    if out:
         rows_out.append(("deploy_e2e.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
     return rows_out
@@ -108,7 +104,10 @@ def deploy_e2e(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale subset for CI (no JSON output)")
+                    help="seconds-scale subset for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
     args = ap.parse_args()
-    for name, us, derived in deploy_e2e(smoke=args.smoke):
+    for name, us, derived in deploy_e2e(smoke=args.smoke,
+                                        json_path=args.json):
         print(f"{name},{us:.1f},{derived}")

@@ -25,10 +25,9 @@ random search). The emitted ``results/BENCH_multichip.json`` carries an
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
-from .common import RESULTS_DIR, model_graph  # also sets up sys.path to src
+from .common import model_graph, write_record  # also sets up sys.path to src
 from repro.core import HierarchicalMesh
 from repro.core.placement import optimize_placement
 from repro.core.placement.ppo import PPOConfig
@@ -54,7 +53,7 @@ def _case(graph, hm, method, budget, objective="comm_cost", **kw):
     }
 
 
-def multichip(smoke: bool = False):
+def multichip(smoke: bool = False, json_path: str | None = None):
     if smoke:
         hm = HierarchicalMesh(2, 2, 2, 2, link_bw=8e9, core_flops=25.6e9,
                               hop_latency=2e-8)
@@ -113,14 +112,12 @@ def multichip(smoke: bool = False):
         # the acceptance claims are about the full-size run; at smoke scale
         # the seeded constructors can already be optimal and genetic merely
         # ties them
+        ok_rs = acceptance["genetic_beats_random_search_comm_cost"]
+        ok_ic = acceptance["genetic_interchip_below_best_flat_baseline"]
         rows.append(("multichip.acceptance", 0.0,
-                     f"genetic<rs_comm={acceptance['genetic_beats_random_search_comm_cost']} "
-                     f"genetic<flat_interchip={acceptance['genetic_interchip_below_best_flat_baseline']}"))
-    if not smoke:
-        os.makedirs(RESULTS_DIR, exist_ok=True)
-        out = os.path.join(RESULTS_DIR, "BENCH_multichip.json")
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
+                     f"genetic<rs_comm={ok_rs} genetic<flat_interchip={ok_ic}"))
+    out = write_record(record, json_path, smoke, "BENCH_multichip.json")
+    if out:
         rows.append(("multichip.json", 0.0, f"wrote {os.path.relpath(out)}"))
     return rows
 
@@ -128,7 +125,10 @@ def multichip(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale CI subset (tiny chips/budgets, no JSON)")
+                    help="seconds-scale CI subset (tiny chips/budgets)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
     args = ap.parse_args()
-    for name, us, derived in multichip(smoke=args.smoke):
+    for name, us, derived in multichip(smoke=args.smoke,
+                                       json_path=args.json):
         print(f"{name},{us:.1f},{derived}")

@@ -16,16 +16,21 @@ objective to one device dispatch returning just the [B] scores. Sequential
 simulated annealing calls the scorer at B=1 every step, so the B=1 sweep is
 the before/after for SA on accelerator-backed objectives. Emits
 ``results/BENCH_noc_eval.json`` and the usual run.py CSV rows.
+
+The record always carries a ``parity`` block — the max relative deviation of
+the batched backends from the reference per-edge loop on seeded placements —
+which is what the CI regression gate checks (timings are too noisy to gate).
+``--smoke`` runs a seconds-scale subset; ``--json PATH`` writes the record
+there.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from .common import RESULTS_DIR, bench_time as _time
+from .common import bench_time as _time, write_record
 from repro.core import NoC, random_dag
 from repro.core import noc_batch
 
@@ -33,10 +38,32 @@ POPS = (1, 16, 64, 256)
 TOPOLOGIES = ((8, 8, False), (16, 16, True))
 
 
-def noc_eval():
+def _parity_block():
+    """Deterministic backend-parity metrics (the gate-able part)."""
+    noc = NoC(4, 4, torus=True)
+    graph = random_dag(noc.n_cores, p=0.15, seed=0)
+    rng = np.random.default_rng(7)
+    P = np.stack([rng.permutation(noc.n_cores) for _ in range(8)])
+    ref = np.array([noc.evaluate(graph, p).comm_cost for p in P])
+    out = {}
+    score_np = noc_batch.make_scorer(noc, graph, "batch")
+    out["max_rel_diff_numpy"] = float(
+        np.abs(score_np(P) - ref).max() / np.abs(ref).max())
+    if noc_batch.HAS_JAX:
+        score_jax = noc_batch.make_scorer(noc, graph, "jax")
+        out["max_rel_diff_jax"] = float(
+            np.abs(np.asarray(score_jax(P), np.float64) - ref).max()
+            / np.abs(ref).max())
+    return out
+
+
+def noc_eval(smoke: bool = False, json_path: str | None = None):
+    pops = (1, 16) if smoke else POPS
+    topologies = ((4, 4, False),) if smoke else TOPOLOGIES
     rows_out = []
-    record = {"populations": list(POPS), "cases": []}
-    for (R, C, torus) in TOPOLOGIES:
+    record = {"smoke": smoke, "populations": list(pops), "cases": [],
+              "parity": _parity_block()}
+    for (R, C, torus) in topologies:
         noc = NoC(R, C, torus=torus)
         n = noc.n_cores
         graph = random_dag(n, p=0.06 if n > 100 else 0.15, seed=0)
@@ -47,7 +74,7 @@ def noc_eval():
         rng = np.random.default_rng(1)
         case = {"rows": R, "cols": C, "torus": torus, "n_edges": n_edges,
                 "table_build_s": build_s, "sweeps": []}
-        for pop in POPS:
+        for pop in pops:
             P = np.stack([rng.permutation(n) for _ in range(pop)])
             ref_s = _time(lambda: [noc.evaluate(graph, p) for p in P])
             np_s = _time(lambda: bn.evaluate(graph, P, backend="numpy"))
@@ -90,7 +117,7 @@ def noc_eval():
     # ---- fused objective scorers (the sequential-SA before/after) ---------
     # Sequential SA scores B=1 per step; the fused scorer's win there is the
     # dispatch + host-materialization overhead of the full-metrics path.
-    if noc_batch.HAS_JAX:
+    if noc_batch.HAS_JAX and not smoke:
         from repro.deploy.objective import objective_scorer
         R, C, torus = 8, 8, False
         noc = NoC(R, C, torus=torus)
@@ -105,7 +132,8 @@ def noc_eval():
                 full = objective_scorer(noc, graph, objective, backend="jax",
                                         fused=False)
                 fused = objective_scorer(noc, graph, objective, backend="jax")
-                full(P); fused(P)                    # warm-up / compile
+                full(P)                              # warm-up / compile
+                fused(P)
                 full_s = _time(lambda: full(P), repeats=5)
                 fused_s = _time(lambda: fused(P), repeats=5)
                 obj_rec[f"pop{pop}"] = {
@@ -124,14 +152,24 @@ def noc_eval():
             fused_rec["objectives"][objective] = obj_rec
         record["fused_objective"] = fused_rec
 
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    out = os.path.join(RESULTS_DIR, "BENCH_noc_eval.json")
-    with open(out, "w") as f:
-        json.dump(record, f, indent=2)
-    rows_out.append(("noc_eval.json", 0.0, f"wrote {os.path.relpath(out)}"))
+    p = record["parity"]
+    rows_out.append(("noc_eval.parity", 0.0,
+                     " ".join(f"{k}={v:.2e}" for k, v in p.items())))
+
+    out = write_record(record, json_path, smoke, "BENCH_noc_eval.json")
+    if out:
+        rows_out.append(("noc_eval.json", 0.0,
+                         f"wrote {os.path.relpath(out)}"))
     return rows_out
 
 
 if __name__ == "__main__":
-    for name, us, derived in noc_eval():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
+    args = ap.parse_args()
+    for name, us, derived in noc_eval(smoke=args.smoke, json_path=args.json):
         print(f"{name},{us:.1f},{derived}")

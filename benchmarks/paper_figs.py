@@ -6,7 +6,6 @@ All numbers come from the same simulator stack the paper used (NoC + partition
 """
 from __future__ import annotations
 
-import numpy as np
 
 from .common import (CORE_FLOPS, SPIKE_MODELS, make_noc, model_graph,
                      placement_suite, timed)

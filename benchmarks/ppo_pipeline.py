@@ -20,12 +20,11 @@ script from bitrotting.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import numpy as np
 
-from .common import RESULTS_DIR, bench_time
+from .common import bench_time, write_record
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -149,7 +148,7 @@ def _pallas_check():
             else "mosaic"}
 
 
-def ppo_pipeline(smoke: bool = False):
+def ppo_pipeline(smoke: bool = False, json_path: str | None = None):
     if smoke:
         cases = [(4, 4, False, 8)]
         ppo_epochs, repeats = 2, 1
@@ -174,11 +173,8 @@ def ppo_pipeline(smoke: bool = False):
     p = record["pallas"]
     rows_out.append(("ppo_pipeline.pallas_check", p["pallas_eval_s"] * 1e6,
                      f"matches_numpy={p['matches_numpy']} mode={p['mode']}"))
-    if not smoke:
-        os.makedirs(RESULTS_DIR, exist_ok=True)
-        out = os.path.join(RESULTS_DIR, "BENCH_ppo_pipeline.json")
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
+    out = write_record(record, json_path, smoke, "BENCH_ppo_pipeline.json")
+    if out:
         rows_out.append(("ppo_pipeline.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
     return rows_out
@@ -187,7 +183,10 @@ def ppo_pipeline(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale subset for CI (no JSON output)")
+                    help="seconds-scale subset for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
     args = ap.parse_args()
-    for name, us, derived in ppo_pipeline(smoke=args.smoke):
+    for name, us, derived in ppo_pipeline(smoke=args.smoke,
+                                          json_path=args.json):
         print(f"{name},{us:.1f},{derived}")

@@ -12,8 +12,8 @@ def main() -> None:
                     help="skip the slower placement sweeps")
     args = ap.parse_args()
 
-    from . import (deploy_e2e, multichip, noc_eval, paper_figs, ppo_pipeline,
-                   roofline, spike_kernel, tpu_placement)
+    from . import (copartition, deploy_e2e, multichip, noc_eval, paper_figs,
+                   ppo_pipeline, roofline, spike_kernel, tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -25,6 +25,7 @@ def main() -> None:
         ("ppo_pipeline", ppo_pipeline.ppo_pipeline),
         ("deploy_e2e", deploy_e2e.deploy_e2e),
         ("multichip", multichip.multichip),
+        ("copartition", copartition.copartition),
         ("fig6", paper_figs.fig6_placement_32),
         ("fig7_11", paper_figs.hotspots),
         ("fig10", paper_figs.fig10_vs_policy),

@@ -8,7 +8,6 @@ reorder devices. Reported: hop-weighted ICI bytes + hottest link.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 

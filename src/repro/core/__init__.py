@@ -5,6 +5,6 @@ from .topology import (GridTopology, HierarchicalMesh, Topology,  # noqa: F401
 from .noc import NoC, NoCMetrics  # noqa: F401
 from .noc_batch import (BatchedNoC, BatchMetrics, batched_noc,  # noqa: F401
                         comm_cost_batch, directional_cdv_batch, evaluate_batch)
-from .partition import (CoreSpec, LayerProfile, Partition,  # noqa: F401
-                        partition_model)
+from .partition import (CHIP_STRATEGIES, STRATEGIES, CoreSpec,  # noqa: F401
+                        LayerProfile, Partition, partition_model)
 from . import noc_batch, pipeline, tpu_adapter  # noqa: F401

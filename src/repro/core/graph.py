@@ -22,12 +22,16 @@ class LogicalGraph:
     adj[i, j] = bytes sent from node i to node j per step (0 if no edge).
     compute[i] = per-step compute cost of node i (seconds, or normalized units).
     memory[i]  = bytes of state (weights + activations) resident on node i.
+    chip_of[i] = chip the partitioner assigned node i to (chip-aware
+                 partitioning only; ``None`` means chip-oblivious — every
+                 historical path).
     """
 
     adj: np.ndarray
     compute: np.ndarray
     memory: np.ndarray
     names: list | None = None
+    chip_of: np.ndarray | None = None
 
     def __post_init__(self):
         self.adj = np.asarray(self.adj, dtype=np.float64)
@@ -38,6 +42,8 @@ class LogicalGraph:
         self.memory = np.asarray(self.memory, dtype=np.float64).reshape(n)
         if self.names is None:
             self.names = [f"n{i}" for i in range(n)]
+        if self.chip_of is not None:
+            self.chip_of = np.asarray(self.chip_of, dtype=np.int64).reshape(n)
 
     @property
     def n(self) -> int:
@@ -48,6 +54,22 @@ class LogicalGraph:
         """List of (src, dst, bytes) for nonzero edges."""
         src, dst = np.nonzero(self.adj)
         return [(int(i), int(j), float(self.adj[i, j])) for i, j in zip(src, dst)]
+
+    # ---- chip-cut tagging (chip-aware partitioning, paper §4.2 co-design) ----
+    def chip_cut_mask(self) -> np.ndarray:
+        """[n, n] bool — True where an edge's endpoints live on different
+        chips under the partitioner's ``chip_of`` assignment. All-False when
+        the partition was chip-oblivious (``chip_of is None``)."""
+        if self.chip_of is None:
+            return np.zeros_like(self.adj, dtype=bool)
+        return (self.chip_of[:, None] != self.chip_of[None, :]) & (self.adj > 0)
+
+    def chip_cut_bytes(self) -> float:
+        """Partition-induced inter-chip traffic (bytes/step) *before* any
+        placement: Σ volumes of edges crossing a chip cut. The quantity
+        chip-aware partitioning minimizes, and a lower bound on the placed
+        interchip bytes of any chip-respecting placement."""
+        return float(self.adj[self.chip_cut_mask()].sum())
 
     # ---- RL state encoding (paper Fig 5) -------------------------------------
     def node_features(self) -> np.ndarray:

@@ -13,6 +13,30 @@ Three strategies are implemented for the Fig 4 comparison:
 * ``balanced`` — allocate cores ∝ modeled slice latency (compute + spill streaming),
   then refine allocation greedily to minimize the maximum per-core latency.
 
+Two *chip-aware* strategies close the partition→topology co-design loop on
+multi-chip systems (:class:`repro.core.topology.HierarchicalMesh`), where the
+flat strategies routinely slice a layer across a chip boundary and force the
+placement optimizer to burn inter-chip bandwidth fixing a partition-time
+mistake (cf. Song et al.'s SNN design flow and ILP crossbar mapping, which
+treat partition and mapping as one problem):
+
+* ``chip``          — first allocate whole layers / contiguous layer groups to
+  chips by DP, minimizing the activation bytes that must cross chip cuts
+  subject to every chip's latency staying within a slack band of the best
+  achievable balance (each chip's aggregate SRAM/FLOPs budget is what the
+  latency model reads); then run the existing ``balanced`` compute+storage
+  refinement *within* each chip.
+* ``chip_balanced`` — same two-level flow, but the chip allocation strictly
+  minimizes the per-chip latency bucket first and only tie-breaks on cut
+  bytes (balance-first; ``chip`` is cut-first).
+
+Both require ``topology=``; on a single-chip topology they degenerate to
+``balanced`` (with an all-zero chip assignment). The resulting
+:class:`Partition` carries ``chip_of`` (slice → chip) and
+:meth:`Partition.to_graph` tags the logical graph with it, so objectives can
+score partition-induced interchip traffic *before* any placement and
+optimizers can seed searches with chip-respecting initializations.
+
 ``Partition.to_graph()`` lowers a partition to the weighted logical DAG consumed by the
 placement optimizer: slice s of layer l multicasts its activation shard to every slice
 of layer l+1 (K-split consumers need the full input), which is exactly the multicast
@@ -68,6 +92,7 @@ class Partition:
     slices: list
     core: CoreSpec
     strategy: str
+    chip_of: np.ndarray | None = None   # [n] slice -> chip (chip-aware only)
 
     @property
     def n(self) -> int:
@@ -80,6 +105,29 @@ class Partition:
         """Bucket-effect metric: max/mean per-core latency (1.0 = perfect)."""
         lat = self.latencies()
         return float(lat.max() / lat.mean()) if lat.size else 1.0
+
+    @property
+    def n_chips(self) -> int:
+        """Chips the slices are assigned over (1 when chip-oblivious)."""
+        if self.chip_of is None:
+            return 1
+        return int(self.chip_of.max()) + 1 if self.chip_of.size else 1
+
+    def chip_loads(self) -> np.ndarray:
+        """[n_chips] max per-slice latency on each chip (the per-chip bucket
+        the chip-aware DP balances)."""
+        lat = self.latencies()
+        chips = self.chip_of if self.chip_of is not None \
+            else np.zeros(self.n, dtype=np.int64)
+        out = np.zeros(self.n_chips)
+        np.maximum.at(out, chips, lat)
+        return out
+
+    def interchip_bytes(self) -> float:
+        """Partition-induced inter-chip traffic (bytes/step), before any
+        placement — Σ volumes of logical edges whose endpoints the partitioner
+        assigned to different chips. 0.0 when chip-oblivious."""
+        return self.to_graph().chip_cut_bytes()
 
     def to_graph(self) -> LogicalGraph:
         n = len(self.slices)
@@ -96,7 +144,20 @@ class Partition:
         compute = np.array([s.flops for s in self.slices])
         memory = np.array([s.weight_bytes for s in self.slices])
         return LogicalGraph(adj, compute, memory,
-                            names=[s.name for s in self.slices])
+                            names=[s.name for s in self.slices],
+                            chip_of=self.chip_of)
+
+
+#: Chip-aware strategies (two-level: layers -> chips, then balanced within).
+CHIP_STRATEGIES = ("chip", "chip_balanced")
+
+#: All partition_model strategies.
+STRATEGIES = ("compute", "storage", "balanced") + CHIP_STRATEGIES
+
+#: Latency slack band of the cut-minimizing ``chip`` DP: a chip may run up to
+#: this fraction above the best achievable per-chip balance if that lets the
+#: cut land at a cheaper layer boundary.
+CHIP_LATENCY_SLACK = 0.25
 
 
 def _layer_weight(layer: LayerProfile, strategy: str, core: CoreSpec) -> float:
@@ -104,10 +165,12 @@ def _layer_weight(layer: LayerProfile, strategy: str, core: CoreSpec) -> float:
         return layer.flops
     if strategy == "storage":
         return layer.weight_bytes
-    if strategy == "balanced":
+    if strategy in ("balanced",) + CHIP_STRATEGIES:
+        # chip-aware strategies balance the same modeled slice latency
         return Slice(0, layer.name, 1.0, layer.flops, layer.weight_bytes,
                      layer.out_bytes).latency(core)
-    raise ValueError(f"unknown strategy {strategy!r}")
+    raise ValueError(f"unknown strategy {strategy!r}; "
+                     f"choose from {STRATEGIES}")
 
 
 def _alloc_largest_remainder(weights: np.ndarray, n_cores: int) -> np.ndarray:
@@ -201,15 +264,141 @@ def _merge_group(layers, a: int, b: int) -> LayerProfile:
         c_in=sub[0].c_in, c_out=sub[-1].c_out)
 
 
+def _unit_latency(layer: LayerProfile, k: int, core: CoreSpec) -> float:
+    """Max slice latency of ``layer`` split K-wise over ``k`` cores (O(1):
+    the worst slice carries the ceil share of the channels)."""
+    if k <= 0:
+        return float("inf")
+    c_out = max(layer.c_out, 1)
+    kk = min(k, c_out)
+    share = -(-c_out // kk) / c_out           # ceil(c_out/k)/c_out
+    return Slice(0, layer.name, share, layer.flops * share,
+                 layer.weight_bytes * share,
+                 layer.out_bytes * share).latency(core)
+
+
+def _chip_latency(units, weights, a: int, b: int, cap: int,
+                  core: CoreSpec) -> float:
+    """Modeled latency of one chip hosting ``units[a:b]`` on ``cap`` cores:
+    the chip's aggregate SRAM/FLOPs budget enters through the per-slice spill
+    model after a proportional core allocation (no greedy refinement here —
+    the DP calls this O(U²·chips) times; the winner is refined afterwards)."""
+    if b - a > cap:                           # each unit needs >= 1 core
+        return float("inf")
+    if b <= a:
+        return 0.0
+    alloc = _alloc_largest_remainder(weights[a:b], cap)
+    return max(_unit_latency(units[a + i], int(k), core)
+               for i, k in enumerate(alloc))
+
+
+def _chips_dp(units, weights, capacities, core: CoreSpec,
+              cut_weights=None, slack: float = 0.0):
+    """Contiguous allocation of layer-units to chips (the chip-aware DP).
+
+    Two passes over ``f[c][i]`` = best value assigning the first ``i`` units
+    to the first ``c`` chips:
+
+    1. *balance*: minimize the max per-chip latency -> ``B*``;
+    2. *cut*: minimize Σ weighted cut bytes (the activation bytes the last
+       unit before each chip boundary must ship across it, scaled by
+       ``cut_weights`` — the co-partition feedback hook) subject to every
+       chip's latency staying within ``B* × (1 + slack)``.
+
+    Returns (list of (a, b) unit ranges per used chip, B*).
+    """
+    n_units = len(units)
+    n_chips = min(len(capacities), n_units)
+    caps = [int(c) for c in capacities[:n_chips]]
+    cw = np.ones(n_units) if cut_weights is None \
+        else np.asarray(cut_weights, dtype=np.float64)
+    cut_cost = np.array([u.out_bytes for u in units]) * cw[:n_units]
+
+    lat_cache: dict = {}
+
+    def lat(a, b, c):
+        key = (a, b, caps[c])
+        if key not in lat_cache:
+            lat_cache[key] = _chip_latency(units, weights, a, b, caps[c], core)
+        return lat_cache[key]
+
+    INF = float("inf")
+    # pass 1: minimize the latency bucket
+    f = np.full((n_chips + 1, n_units + 1), INF)
+    f[0, 0] = 0.0
+    for c in range(1, n_chips + 1):
+        for i in range(c, n_units + 1):
+            lo = max(c - 1, i - caps[c - 1])
+            for j in range(lo, i):
+                v = max(f[c - 1, j], lat(j, i, c - 1))
+                if v < f[c, i]:
+                    f[c, i] = v
+    b_star = float(f[n_chips, n_units])
+    if not np.isfinite(b_star):
+        raise ValueError(
+            f"cannot fit {n_units} layer units onto {n_chips} chips with "
+            f"capacities {caps} (a contiguous chip group would overflow)")
+
+    # pass 2: minimize weighted cut bytes within the latency band
+    cap_lat = b_star * (1.0 + max(slack, 0.0)) + 1e-12 * max(b_star, 1.0)
+    g = np.full((n_chips + 1, n_units + 1), INF)
+    back = np.zeros((n_chips + 1, n_units + 1), dtype=int)
+    g[0, 0] = 0.0
+    for c in range(1, n_chips + 1):
+        for i in range(c, n_units + 1):
+            lo = max(c - 1, i - caps[c - 1])
+            for j in range(lo, i):
+                if g[c - 1, j] == INF or lat(j, i, c - 1) > cap_lat:
+                    continue
+                v = g[c - 1, j] + (cut_cost[j - 1] if 0 < j else 0.0)
+                if v < g[c, i]:
+                    g[c, i] = v
+                    back[c, i] = j
+    bounds = [n_units]
+    for c in range(n_chips, 0, -1):
+        bounds.append(int(back[c, bounds[-1]]))
+    bounds.reverse()
+    groups = [(bounds[c], bounds[c + 1]) for c in range(n_chips)]
+    return groups, b_star
+
+
 def partition_model(layers, n_cores: int, strategy: str = "balanced",
-                    core: CoreSpec = CoreSpec()) -> Partition:
+                    core: CoreSpec = CoreSpec(), topology=None,
+                    cut_weights=None,
+                    chip_slack: float = CHIP_LATENCY_SLACK) -> Partition:
     """Partition ``layers`` onto ``n_cores`` logical cores.
 
     If there are more layers than cores, consecutive layers are first grouped
     into ``n_cores`` contiguous groups balancing the strategy weight (the paper
     maps 54-unit ResNet50 onto 32 logical cores this way), then each group
-    becomes one slice."""
+    becomes one slice.
+
+    The chip-aware strategies (:data:`CHIP_STRATEGIES`) need ``topology`` —
+    any :class:`repro.core.topology.Topology`; its chip structure
+    (``n_chips`` / ``chip_capacities``) drives a two-level flow: contiguous
+    layer-unit groups are DP-allocated to chips (``chip`` minimizes the
+    activation bytes crossing chip cuts within a ``chip_slack`` latency band;
+    ``chip_balanced`` strictly balances per-chip latency first), then the
+    ``balanced`` compute+storage refinement runs within each chip. The
+    returned partition carries ``chip_of`` (slice → chip). ``cut_weights``
+    (per layer-unit, multiplying the cut cost of a boundary placed after that
+    unit) is the co-partition feedback hook ``deploy_model`` uses to fold
+    *placed* interchip traffic back into the allocation. On a single-chip
+    topology the chip strategies degenerate to ``balanced`` exactly (plus an
+    all-zero ``chip_of``); flat topologies and the flat strategies are
+    bit-identical to the historical chip-oblivious path.
+    """
     layers = list(layers)
+    if strategy in CHIP_STRATEGIES:
+        if topology is None:
+            raise ValueError(f"strategy {strategy!r} needs topology= "
+                             "(the chip structure drives the allocation)")
+        if topology.n_cores != n_cores:
+            raise ValueError(f"topology has {topology.n_cores} cores, "
+                             f"asked to partition onto {n_cores}")
+        return _partition_chip_aware(layers, strategy, core, topology,
+                                     cut_weights, chip_slack)
+
     if len(layers) > n_cores:
         weights = np.array([_layer_weight(l, strategy, core) for l in layers])
         groups = _group_contiguous(weights, n_cores)
@@ -224,6 +413,47 @@ def partition_model(layers, n_cores: int, strategy: str = "balanced",
     for li, (layer, k) in enumerate(zip(layers, alloc)):
         slices.extend(_slice_layer(li, layer, int(k)))
     return Partition(slices=slices, core=core, strategy=strategy)
+
+
+def _partition_chip_aware(layers, strategy: str, core: CoreSpec, topology,
+                          cut_weights, chip_slack: float) -> Partition:
+    """Two-level chip-aware partitioning (see :func:`partition_model`)."""
+    n_cores = topology.n_cores
+    if topology.n_chips <= 1:
+        # single chip: exactly the balanced flow, tagged chip 0
+        flat = partition_model(layers, n_cores, "balanced", core)
+        return Partition(slices=flat.slices, core=core, strategy=strategy,
+                         chip_of=np.zeros(flat.n, dtype=np.int64))
+
+    units = list(layers)
+    if len(units) > n_cores:
+        w = np.array([_layer_weight(l, "balanced", core) for l in units])
+        units = [_merge_group(units, a, b) for a, b in _group_contiguous(w, n_cores)]
+    weights = np.array([_layer_weight(l, "balanced", core) for l in units])
+    # lay the layer chain along the topology's physically-contiguous chip
+    # chain (serpentine on chip grids) so consecutive chips are adjacent and
+    # every chip-cut edge crosses exactly one boundary
+    order = np.asarray(topology.chip_order(), dtype=np.int64)
+    capacities = np.asarray(topology.chip_capacities())[order]
+    slack = chip_slack if strategy == "chip" else 0.0
+    groups, _ = _chips_dp(units, weights, capacities, core,
+                          cut_weights=cut_weights, slack=slack)
+
+    slices: list = []
+    chip_of: list = []
+    for gi, (a, b) in enumerate(groups):
+        if b <= a:
+            continue
+        chip = int(order[gi])
+        cap = int(capacities[gi])
+        alloc = _alloc_largest_remainder(weights[a:b], cap)
+        alloc = _refine_alloc(units[a:b], alloc, core)
+        for off, k in enumerate(alloc):
+            new = _slice_layer(a + off, units[a + off], int(k))
+            slices.extend(new)
+            chip_of.extend([chip] * len(new))
+    return Partition(slices=slices, core=core, strategy=strategy,
+                     chip_of=np.asarray(chip_of, dtype=np.int64))
 
 
 def _max_latency(layers, alloc, core) -> float:

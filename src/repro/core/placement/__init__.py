@@ -1,5 +1,6 @@
 from .optimizer import optimize_placement, PlacementResult, METHODS  # noqa: F401
-from .baselines import zigzag, sigmate, random_search, simulated_annealing  # noqa: F401
+from .baselines import (chip_init, zigzag, sigmate, random_search,  # noqa: F401
+                        simulated_annealing)
 from .population import (genetic_population,  # noqa: F401
                          random_search_population,
                          simulated_annealing_population)

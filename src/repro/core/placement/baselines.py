@@ -39,14 +39,62 @@ def sigmate(n_nodes: int, noc) -> np.ndarray:
     return np.asarray(order[:n_nodes])
 
 
+def chip_init(graph, noc) -> np.ndarray:
+    """Chip-respecting constructor: slices pre-binned to their assigned chip.
+
+    Requires a chip-aware partition (``graph.chip_of``, see
+    ``repro.core.partition`` ``strategy="chip"``): each chip's slices fill
+    that chip's cores in serpentine (within-chip sigmate) order, so the only
+    inter-chip traffic left is the partition's own chip-cut edges. This is
+    the initialization the searches (SA/genetic/RS) and the RL methods are
+    seeded with on hierarchical topologies — the partition→place half of the
+    co-design loop.
+    """
+    if graph.chip_of is None:
+        raise ValueError("graph has no chip assignment; partition with a "
+                         "chip-aware strategy first (strategy='chip')")
+    chip_core = noc.chip_of_array()
+    placement = np.full(graph.n, -1, dtype=int)
+    for chip in np.unique(graph.chip_of):
+        nodes = np.nonzero(graph.chip_of == chip)[0]
+        cores = np.nonzero(chip_core == chip)[0]
+        if nodes.size > cores.size:
+            raise ValueError(f"chip {int(chip)} assigned {nodes.size} slices "
+                             f"but has only {cores.size} cores")
+        order = _serpentine(cores, noc)
+        placement[nodes] = order[:nodes.size]
+    return placement
+
+
+def _serpentine(cores: np.ndarray, noc) -> np.ndarray:
+    """Order ``cores`` serpentine-wise (row-major, alternating direction per
+    row) so consecutive slices stay physically adjacent inside their chip."""
+    if not hasattr(noc, "coord"):       # non-grid topologies: index order
+        return np.asarray(cores, dtype=int)
+    coords = np.array([noc.coord(c) for c in cores])
+    order = []
+    for k, r in enumerate(np.unique(coords[:, 0])):
+        row = cores[coords[:, 0] == r]
+        row = row[np.argsort(coords[coords[:, 0] == r, 1])]
+        order.extend(row[::-1] if k % 2 else row)
+    return np.asarray(order, dtype=int)
+
+
 def random_search(graph, noc, iters: int = 2000, seed: int = 0,
                   backend: str = "batch",
-                  objective="comm_cost") -> np.ndarray:
+                  objective="comm_cost", init=None) -> np.ndarray:
     """Paper's RS baseline: sample random injective placements, keep the best
-    (under ``objective`` — comm cost by default, see repro.deploy.objective)."""
+    (under ``objective`` — comm cost by default, see repro.deploy.objective).
+    ``init``, when given, is scored as candidate zero (before any RNG draw,
+    so the sampling stream is unchanged) — the chip-respecting seeding hook.
+    """
     rng = np.random.default_rng(seed)
     score = make_scorer(noc, graph, backend, objective)
     best, best_cost = None, np.inf
+    if init is not None:
+        init = np.asarray(init, dtype=int)
+        validate_placements(noc, init, graph.n)
+        best, best_cost = init, float(score(init[None, :])[0])
     for _ in range(iters):
         p = rng.permutation(noc.n_cores)[:graph.n]
         c = float(score(p[None, :])[0])

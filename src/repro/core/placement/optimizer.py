@@ -70,17 +70,45 @@ METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
            "population_random_search", "population_simulated_annealing")
 
 
+def _chip_seed(graph, noc):
+    """Chip-respecting initialization when the partition was chip-aware and
+    the topology actually has chips; ``None`` otherwise (every historical
+    path — flat topologies and chip-oblivious partitions stay bit-identical).
+    """
+    if getattr(graph, "chip_of", None) is None or \
+            getattr(noc, "n_chips", 1) <= 1:
+        return None
+    return baselines.chip_init(graph, noc)
+
+
 def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                        budget: int | None = None, backend: str | None = None,
                        objective=None, **kw) -> PlacementResult:
     """``backend=None`` / ``objective=None`` mean the defaults ("batch" /
     "comm_cost" — and for ppo/policy, a caller-supplied ``cfg`` keeps its own
     values); an explicit value overrides everywhere, including a passed
-    ``cfg``."""
+    ``cfg``.
+
+    On a multi-chip topology with a chip-aware partition (``graph.chip_of``),
+    the searches are seeded with :func:`baselines.chip_init` — slices
+    pre-binned to their assigned chip's cores — so search starts from (and
+    can only improve on) the partition's co-design intent: SA/genetic/RS get
+    it as their ``init``; for the RL methods (ppo/policy) the seed joins the
+    candidate set the returned best placement is drawn from. An explicit
+    ``init=`` kwarg always wins. The deterministic flat constructors
+    (``zigzag``/``sigmate``/``greedy``) stay chip-oblivious baselines.
+    """
     t0 = time.perf_counter()
     history = None
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
+    init_methods = ("random_search", "simulated_annealing", "genetic",
+                    "population_random_search",
+                    "population_simulated_annealing")
+    chip_seed = (_chip_seed(graph, noc)
+                 if method in init_methods + ("ppo", "policy") else None)
+    if chip_seed is not None and method in init_methods:
+        kw.setdefault("init", chip_seed)
     if method == "zigzag":
         placement = baselines.zigzag(graph.n, noc)
     elif method == "sigmate":
@@ -143,6 +171,12 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
 
     obj = as_objective(ob)
     m = noc.evaluate(graph, placement)
+    if chip_seed is not None and method in ("ppo", "policy"):
+        # RL methods have no init hook; seed them by including the
+        # chip-respecting constructor in the best-of candidate set
+        m_seed = noc.evaluate(graph, chip_seed)
+        if obj.from_metrics(m_seed, noc) < obj.from_metrics(m, noc):
+            placement, m = chip_seed, m_seed
     return PlacementResult(
         method=method, placement=np.asarray(placement),
         comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,

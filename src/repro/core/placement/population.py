@@ -31,18 +31,24 @@ from .baselines import sigmate, zigzag
 def random_search_population(graph, noc, iters: int = 2000,
                              pop_size: int = 256, seed: int = 0,
                              backend: str = "batch",
-                             objective="comm_cost") -> np.ndarray:
+                             objective="comm_cost", init=None) -> np.ndarray:
     """Paper's RS baseline, scored ``pop_size`` placements at a time.
 
     Consumes the RNG stream exactly like the sequential version (one
     ``rng.permutation`` per candidate, first-minimum wins), so for a given
     ``seed`` and ``objective`` it returns the same placement — only faster.
+    ``init`` is scored as candidate zero before any RNG draw (the
+    chip-respecting seeding hook), leaving the sampling stream unchanged.
     """
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
     score = make_scorer(noc, graph, backend, objective)
     best, best_cost = None, np.inf
+    if init is not None:
+        init = np.asarray(init, dtype=int)
+        validate_placements(noc, init, graph.n)
+        best, best_cost = init, float(score(init[None, :])[0])
     done = 0
     while done < iters:
         k = min(pop_size, iters - done)

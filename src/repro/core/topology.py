@@ -138,6 +138,34 @@ class Topology:
         """[n_links] bool — True on inter-chip links; None on flat chips."""
         return None
 
+    # ---- chip structure (flat topologies are one chip) --------------------
+    @property
+    def n_chips(self) -> int:
+        """Number of chips the cores are tiled over (1 on flat topologies —
+        the condition under which chip-aware partitioning degenerates to the
+        historical chip-oblivious strategies)."""
+        return 1
+
+    def chip_of_array(self) -> np.ndarray:
+        """[n_cores] int — chip index of every core (all zeros on one chip)."""
+        return np.zeros(self.n_cores, dtype=np.int64)
+
+    def cores_of_chip(self, chip: int) -> np.ndarray:
+        """Core indices belonging to ``chip``, in deterministic (row-major)
+        order — the order chip-respecting initializers fill them in."""
+        return np.nonzero(self.chip_of_array() == int(chip))[0]
+
+    def chip_capacities(self) -> np.ndarray:
+        """[n_chips] int — cores per chip."""
+        return np.bincount(self.chip_of_array(), minlength=self.n_chips)
+
+    def chip_order(self) -> np.ndarray:
+        """Chip ids in a physically-contiguous chain order — consecutive
+        chips adjacent wherever the fabric allows. Chip-aware partitioning
+        lays contiguous layer groups along this chain, so each chip-cut edge
+        crosses exactly one boundary instead of routing diagonally."""
+        return np.arange(self.n_chips, dtype=np.int64)
+
     @property
     def uniform_links(self) -> bool:
         """True iff every link shares the scalar bandwidth/latency — the
@@ -526,13 +554,9 @@ class HierarchicalMesh(GridTopology):
         # cores live on different chips. (Mesh wrap link ids exist in the
         # core*4+dir id space but are never routed; their attributes are
         # irrelevant and their traffic is always zero.)
-        src = self.link_src_array().astype(np.int64)
-        dst = self.link_dst_array().astype(np.int64)
-        chip = ((src // self.cols) // core_rows * self.chips_cols
-                + (src % self.cols) // core_cols)
-        chip_d = ((dst // self.cols) // core_rows * self.chips_cols
-                  + (dst % self.cols) // core_cols)
-        self._interchip = chip != chip_d
+        chips = self.chip_of_array()
+        self._interchip = (chips[self.link_src_array().astype(np.int64)]
+                           != chips[self.link_dst_array().astype(np.int64)])
         self._bw = np.where(self._interchip, self.interchip_bw, self.link_bw)
         self._lat = np.where(self._interchip, self.interchip_latency,
                              self.hop_latency)
@@ -545,8 +569,29 @@ class HierarchicalMesh(GridTopology):
 
     def chip_of(self, core: int) -> int:
         """Flat chip index of a core (row-major over the chip grid)."""
-        r, c = self.coord(core)
-        return (r // self.core_rows) * self.chips_cols + c // self.core_cols
+        return int(self.chip_of_array()[int(core)])
+
+    def chip_of_array(self) -> np.ndarray:
+        cached = getattr(self, "_chip_of", None)
+        if cached is None:
+            idx = np.arange(self.n_cores, dtype=np.int64)
+            r, c = idx // self.cols, idx % self.cols
+            cached = (r // self.core_rows) * self.chips_cols \
+                + c // self.core_cols
+            self._chip_of = cached
+        return cached
+
+    def chip_order(self) -> np.ndarray:
+        """Serpentine over the chip grid: every consecutive pair of chips in
+        the chain shares a physical boundary, so the layer chain's chip cuts
+        never route diagonally (two boundary crossings) on the global XY
+        fabric."""
+        order = []
+        for r in range(self.chips_rows):
+            cols = (range(self.chips_cols) if r % 2 == 0
+                    else range(self.chips_cols - 1, -1, -1))
+            order.extend(r * self.chips_cols + c for c in cols)
+        return np.asarray(order, dtype=np.int64)
 
     def link_bandwidth(self):
         return self._bw

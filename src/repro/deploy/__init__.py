@@ -8,5 +8,6 @@ multi-objective cost model every placement optimizer scores against
 models × methods × objectives from the command line.
 """
 from .objective import (EnergyModel, Objective, OBJECTIVES,  # noqa: F401
-                        as_objective, objective_scorer)
+                        as_objective, objective_scorer,
+                        partition_interchip_bytes)
 from .engine import DeploymentPlan, SCHEDULES, deploy_model  # noqa: F401

@@ -16,6 +16,8 @@ Examples::
     PYTHONPATH=src python -m repro.deploy --topology hier:2x2:4x4,ibw=1e9 \\
         --methods sigmate,genetic --objectives comm_cost,energy \\
         --contention-feedback
+    PYTHONPATH=src python -m repro.deploy --topology hier:2x2:4x4,ibw=5e8 \\
+        --partition chip --copartition-iters 2 --methods genetic
 """
 from __future__ import annotations
 
@@ -80,8 +82,18 @@ def main(argv=None) -> int:
                     help="inflate per-stage schedule times with the placed "
                          "NoC contention (closes the placement->schedule "
                          "loop)")
-    ap.add_argument("--strategy", default="balanced",
-                    choices=("compute", "storage", "balanced"))
+    ap.add_argument("--partition", "--strategy", dest="strategy",
+                    default="auto",
+                    choices=("auto", "compute", "storage", "balanced",
+                             "chip", "chip_balanced"),
+                    help="partition strategy; 'auto' picks the chip-aware "
+                         "'chip' strategy on hier topologies and 'balanced' "
+                         "on flat grids")
+    ap.add_argument("--copartition-iters", type=int, default=0,
+                    metavar="N",
+                    help="partition->place co-design rounds: feed placed "
+                         "interchip traffic back into the chip allocation "
+                         "(chip-aware strategies on hier topologies only)")
     ap.add_argument("--schedule", default="fpdeep", choices=SCHEDULES)
     ap.add_argument("--units", type=int, default=8,
                     help="pipelined work units (feature-map rows / micro-batches)")
@@ -134,7 +146,8 @@ def main(argv=None) -> int:
                     cfg, noc, partition_strategy=args.strategy, method=method,
                     objective=objective, schedule=args.schedule, n_units=units,
                     seed=args.seed, budget=budget, backend=args.backend,
-                    contention_feedback=args.contention_feedback)
+                    contention_feedback=args.contention_feedback,
+                    copartition_iters=args.copartition_iters)
                 reports.append(plan.report())
                 print(_csv(_row(plan)))
 

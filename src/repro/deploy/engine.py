@@ -26,10 +26,11 @@ import time
 import numpy as np
 
 from ..core import pipeline
-from ..core.partition import CoreSpec, LayerProfile, Partition, partition_model
+from ..core.partition import (CoreSpec, LayerProfile, Partition,
+                              partition_model)
 from ..snn.models import SNNConfig
 from ..snn.profile import profile_model
-from .objective import as_objective
+from .objective import as_objective, partition_interchip_bytes
 
 SCHEDULES = ("layerwise", "fpdeep", "one_f_one_b", "none")
 
@@ -48,6 +49,7 @@ class DeploymentPlan:
     n_units: int
     stage_times_s: dict              # {"profile"|"partition"|"place"|"schedule": s}
     contention_feedback: bool = False
+    copartition_iters: int = 0       # co-design outer-loop rounds actually run
 
     def report(self) -> dict:
         """JSON-able summary (what the CLI/benchmark sweeps emit)."""
@@ -61,12 +63,20 @@ class DeploymentPlan:
                 "mean_utilization": float(self.schedule.mean_utilization()),
                 "contention_feedback": self.contention_feedback,
             }
+        part_rep = {"strategy": self.partition.strategy,
+                    "n_slices": self.partition.n,
+                    "imbalance": float(self.partition.imbalance())}
+        if self.partition.chip_of is not None:
+            part_rep.update({
+                "n_chips": int(self.partition.n_chips),
+                "interchip_cut_bytes":
+                    float(partition_interchip_bytes(self.graph)),
+                "copartition_iters": int(self.copartition_iters),
+            })
         return {
             "model": self.model,
             "noc": self.noc.describe(),
-            "partition": {"strategy": self.partition.strategy,
-                          "n_slices": self.partition.n,
-                          "imbalance": float(self.partition.imbalance())},
+            "partition": part_rep,
             "placement": {"method": r.method, "objective": r.objective,
                           "objective_cost": float(r.objective_cost),
                           "comm_cost": float(r.comm_cost),
@@ -108,7 +118,44 @@ def _schedule(times, schedule: str, n_units: int,
                                 fwd_time=t_f, bwd_time=bwd_ratio * t_f)
 
 
-def deploy_model(model, noc, partition_strategy: str = "balanced",
+def resolve_partition_strategy(strategy: str, noc) -> str:
+    """``"auto"`` → chip-aware on hierarchical (multi-chip) topologies,
+    the historical ``"balanced"`` everywhere else; explicit strategies pass
+    through untouched."""
+    if strategy == "auto":
+        return "chip" if getattr(noc, "n_chips", 1) > 1 else "balanced"
+    return strategy
+
+
+def _measured_cut_weights(part, graph, placement, noc) -> np.ndarray:
+    """Per-layer-unit cut-cost multipliers from *placed* interchip traffic.
+
+    For every logical edge, count the inter-chip links its placed route
+    actually crosses (XY routes between diagonal chips cross two boundaries;
+    multicast fan-out multiplies the producer's shard) and attribute the
+    bytes to the producer's layer unit. The ratio measured/predicted per unit
+    re-weights the chip DP's cut costs on the next co-partition round, so
+    boundaries that turned out expensive in silicon get moved to cheaper
+    layers."""
+    mask = noc.interchip_mask()
+    n_units = max(s.layer for s in part.slices) + 1
+    measured = np.zeros(n_units)
+    predicted = np.zeros(n_units)
+    unit = np.array([s.layer for s in part.slices])
+    cut = graph.chip_cut_mask()
+    for i, j, vol in graph.edges:
+        ids = np.asarray(noc.route_ids(int(placement[i]), int(placement[j])),
+                         dtype=np.int64)
+        measured[unit[i]] += vol * float(mask[ids].sum()) if ids.size else 0.0
+        if cut[i, j]:
+            predicted[unit[i]] += vol
+    w = np.ones(n_units)
+    nz = predicted > 0
+    w[nz] = np.maximum(measured[nz] / predicted[nz], 1e-3)
+    return w
+
+
+def deploy_model(model, noc, partition_strategy: str = "auto",
                  method: str = "ppo", objective="comm_cost",
                  schedule: str = "fpdeep", n_units: int = 8,
                  batch: int = 8, training: bool = True,
@@ -116,6 +163,7 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
                  seed: int = 0, budget: int | None = None,
                  backend: str | None = None, bwd_ratio: float = 2.0,
                  contention_feedback: bool = False,
+                 copartition_iters: int = 0,
                  **method_kw) -> DeploymentPlan:
     """Run the full deployment flow of ``model`` onto ``noc``.
 
@@ -126,6 +174,22 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
     ``method``/``objective``/``backend``/``budget``/``method_kw`` go to
     :func:`optimize_placement`; ``schedule`` is one of :data:`SCHEDULES`
     ("none" skips the scheduling stage).
+
+    ``partition_strategy="auto"`` (the default) selects the chip-aware
+    ``"chip"`` strategy on multi-chip topologies and the historical
+    ``"balanced"`` on flat chips — flat deployments are bit-identical to
+    before chip-aware partitioning existed. Chip-aware partitions carry a
+    slice→chip assignment that also seeds the placement search
+    (:func:`repro.core.placement.chip_init`).
+
+    ``copartition_iters > 0`` closes the partition→place co-design loop on
+    chip-aware strategies: after placing, the *placed* interchip traffic of
+    each layer-unit boundary (multicast fan-out and diagonal-chip routes
+    included) is fed back as cut-cost multipliers into the chip allocation
+    DP, the model is re-partitioned and re-placed, and the best plan under
+    ``objective`` (ties broken on fewer placed interchip bytes) wins. The
+    loop stops early when the allocation fixes. No-op on flat topologies and
+    chip-oblivious strategies.
 
     ``contention_feedback=True`` closes the placement→schedule loop: each
     slice's analytic latency is inflated by the time its *placed* core spends
@@ -143,10 +207,12 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"choose from {SCHEDULES}")
+    strategy = resolve_partition_strategy(partition_strategy, noc)
     t0 = time.perf_counter()
     name, profiles = _profiles(model, batch, training, spike_density)
     t1 = time.perf_counter()
-    part = partition_model(profiles, noc.n_cores, partition_strategy, core)
+    part = partition_model(profiles, noc.n_cores, strategy, core,
+                           topology=noc)
     graph = part.to_graph()
     if schedule == "one_f_one_b":
         # 1F1B needs n_micro >= n_stages for a full pipe; report the count
@@ -157,6 +223,41 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
                                 budget=budget, backend=backend,
                                 objective=objective, **method_kw)
     t3 = time.perf_counter()
+
+    rounds_run = 0
+    if copartition_iters > 0 and part.chip_of is not None \
+            and getattr(noc, "n_chips", 1) > 1:
+
+        def _placed_interchip(g, placement):
+            return noc.interchip_bytes(
+                noc.evaluate(g, placement).link_traffic)
+
+        best = (part, graph, result)
+        best_key = (result.objective_cost,
+                    _placed_interchip(graph, result.placement))
+        cur_part, cur_graph, cur_result = part, graph, result
+        for _ in range(copartition_iters):
+            cut_w = _measured_cut_weights(cur_part, cur_graph,
+                                          cur_result.placement, noc)
+            cand = partition_model(profiles, noc.n_cores, strategy, core,
+                                   topology=noc, cut_weights=cut_w)
+            if cand.n == cur_part.n and \
+                    np.array_equal(cand.chip_of, cur_part.chip_of):
+                break                     # allocation fixed point
+            cand_graph = cand.to_graph()
+            cand_result = optimize_placement(
+                cand_graph, noc, method=method, seed=seed, budget=budget,
+                backend=backend, objective=objective, **method_kw)
+            rounds_run += 1
+            cand_key = (cand_result.objective_cost,
+                        _placed_interchip(cand_graph, cand_result.placement))
+            cur_part, cur_graph, cur_result = cand, cand_graph, cand_result
+            if cand_key < best_key:
+                best_key, best = cand_key, (cand, cand_graph, cand_result)
+        part, graph, result = best
+    t3b = time.perf_counter()
+    t_copart = t3b - t3
+
     times = [s.latency(part.core) for s in part.slices]
     if contention_feedback and schedule != "none":
         # placed NoC contention: seconds each core spends serializing the
@@ -168,10 +269,14 @@ def deploy_model(model, noc, partition_strategy: str = "balanced",
                  for t, p in zip(times, result.placement)]
     sched = _schedule(times, schedule, n_units, bwd_ratio, training)
     t4 = time.perf_counter()
+    stage_times = {"profile": t1 - t0, "partition": t2 - t1,
+                   "place": t3 - t2, "schedule": t4 - t3b}
+    if rounds_run:
+        stage_times["copartition"] = t_copart
     return DeploymentPlan(
         model=name, noc=noc, profiles=profiles, partition=part, graph=graph,
         placement=result, schedule_name=schedule, schedule=sched,
         n_units=n_units,
-        stage_times_s={"profile": t1 - t0, "partition": t2 - t1,
-                       "place": t3 - t2, "schedule": t4 - t3},
-        contention_feedback=contention_feedback and schedule != "none")
+        stage_times_s=stage_times,
+        contention_feedback=contention_feedback and schedule != "none",
+        copartition_iters=rounds_run)

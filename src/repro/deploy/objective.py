@@ -26,6 +26,12 @@ Base metric terms (all per placement, lower is better):
 * ``interchip``  — bytes crossing inter-chip links (0 on flat topologies);
   lets multi-chip searches penalize boundary crossings directly.
 
+Chip-aware partitions (``repro.core.partition`` ``strategy="chip"``) tag the
+logical graph with their slice→chip assignment; :func:`partition_interchip_bytes`
+scores the partition-induced interchip traffic from those tags alone — i.e.
+*before* any placement exists — which is what the partition→place co-design
+loop in :func:`repro.deploy.deploy_model` compares placed traffic against.
+
 An objective spec (accepted everywhere an ``objective=`` parameter exists) is
 a name from :data:`OBJECTIVES`, a ``{metric: weight}`` dict for weighted
 combinations, or an :class:`Objective` instance. ``"comm_cost"`` — the default
@@ -167,6 +173,16 @@ def as_objective(spec) -> Objective:
         return Objective(name, terms)
     raise TypeError(f"objective spec must be str, dict, or Objective, "
                     f"got {type(spec).__name__}")
+
+
+def partition_interchip_bytes(graph) -> float:
+    """Partition-induced interchip traffic (bytes/step), scored *before* any
+    placement: Σ volumes of logical edges whose endpoints the chip-aware
+    partitioner assigned to different chips (``graph.chip_of`` tags). 0.0 for
+    chip-oblivious partitions. A lower bound on the placed interchip bytes of
+    any chip-respecting placement — the quantity ``deploy_model``'s
+    co-partition loop feeds placed traffic back against."""
+    return graph.chip_cut_bytes()
 
 
 def objective_scorer(noc, graph, objective, backend: str = "batch",

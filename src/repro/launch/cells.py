@@ -13,13 +13,12 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.registry import SHAPES, active_param_count, get_config
 from ..models import encdec, lm
 from ..models.encdec import EncDecConfig
-from ..models.specs import ParamSpec, n_params, shape_structs
+from ..models.specs import n_params, shape_structs
 from ..sharding import rules as R
 from ..train.optim import AdamWConfig
 from ..train.step import TrainConfig, make_train_step, optimizer_specs

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import get_config, get_smoke_config
-from ..models import encdec, lm
+from ..models import lm
 from ..models.encdec import EncDecConfig
 from ..models.specs import materialize
 

@@ -159,18 +159,21 @@ def _shapes(cfg: SNNConfig, batch: int):
     shapes = {}
     for b in cfg.blocks:
         if isinstance(b, ConvBNLif):
-            h = -(-h // b.stride); w = -(-w // b.stride)
+            h = -(-h // b.stride)
+            w = -(-w // b.stride)
             if b.spike_out:
                 shapes[b.name] = (batch, h, w, b.cout)
         elif isinstance(b, Residual):
             for u in b.body:
-                h2 = -(-h // u.stride); w2 = -(-w // u.stride)
+                h2 = -(-h // u.stride)
+                w2 = -(-w // u.stride)
                 if u.spike_out:
                     shapes[u.name] = (batch, h2, w2, u.cout)
                 h, w = h2, w2
             shapes[b.name] = (batch, h, w, b.body[-1].cout)   # post-add LIF
         elif isinstance(b, MaxPool):
-            h = -(-h // b.stride); w = -(-w // b.stride)
+            h = -(-h // b.stride)
+            w = -(-w // b.stride)
     return shapes
 
 

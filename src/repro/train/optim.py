@@ -12,7 +12,6 @@ for dynamic range (8-bit Adam practice), dequantized by squaring.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

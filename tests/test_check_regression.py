@@ -1,0 +1,110 @@
+"""The benchmark-regression gate (`benchmarks/check_regression`).
+
+The comparison logic is pure — these tests pin the band math and prove the
+gate fails on an injected metric regression (the CI acceptance criterion)
+without re-running any benchmark.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_regression import (Metric, SUITES, baseline_path,
+                                         check_metric, compare_suite,
+                                         get_path, main)
+
+
+def test_get_path_dotted_and_indexed():
+    rec = {"a": {"b": [10, {"c": 42}]}, "top": 1}
+    assert get_path(rec, "top") == 1
+    assert get_path(rec, "a.b.0") == 10
+    assert get_path(rec, "a.b.1.c") == 42
+    missing = object()
+    assert get_path(rec, "a.nope") is not get_path(rec, "top")
+    assert get_path(rec, "a.b.7") == get_path(rec, "nope")  # both _MISSING
+
+
+def test_metric_requires_exactly_one_mode():
+    with pytest.raises(ValueError):
+        Metric("x")
+    with pytest.raises(ValueError):
+        Metric("x", rtol=0.1, max_abs=1.0)
+    Metric("x", rtol=0.1)           # ok
+
+
+def test_rtol_band():
+    m = Metric("v", rtol=0.01)
+    base = {"v": 100.0}
+    assert check_metric(m, {"v": 100.5}, base)["status"] == "ok"
+    bad = check_metric(m, {"v": 102.0}, base)
+    assert bad["status"] == "fail"
+    assert "rtol" in bad["detail"]
+    # bands are two-sided: unexplained improvements are drift too
+    assert check_metric(m, {"v": 98.0}, base)["status"] == "fail"
+
+
+def test_max_abs_and_expect_modes():
+    assert check_metric(Metric("p", max_abs=1e-9), {"p": 0.0}, None)[
+        "status"] == "ok"
+    assert check_metric(Metric("p", max_abs=1e-9), {"p": 1e-3}, None)[
+        "status"] == "fail"
+    assert check_metric(Metric("b", expect=True), {"b": True}, None)[
+        "status"] == "ok"
+    assert check_metric(Metric("b", expect=True), {"b": False}, None)[
+        "status"] == "fail"
+
+
+def test_missing_metric_and_baseline():
+    m = Metric("v", rtol=0.01)
+    assert check_metric(m, {}, {"v": 1.0})["status"] == "fail"
+    assert check_metric(Metric("v", rtol=0.01, optional=False),
+                        {"v": 1.0}, {})["status"] == "fail"
+    assert check_metric(Metric("w", max_abs=1.0, optional=True),
+                        {}, None)["status"] == "skip"
+    # no baseline file at all -> rtol metrics fail loudly
+    assert check_metric(m, {"v": 1.0}, None)["status"] == "fail"
+
+
+def test_injected_regression_fails_suite():
+    """The acceptance demo as a unit test: perturb one headline metric of a
+    committed baseline and the suite verdict flips to fail."""
+    metrics = SUITES["copartition"]
+    fresh = {"grids": [{"cases": [
+        {"interchip_bytes": 100.0, "makespan_s": 1.0,
+         "partition_cut_bytes": 50.0},
+        {"interchip_bytes": 40.0, "makespan_s": 1.0,
+         "partition_cut_bytes": 30.0},
+        {"interchip_bytes": 60.0, "makespan_s": 1.0},
+        {"interchip_bytes": 40.0, "makespan_s": 1.0},
+    ]}]}
+    good = json.loads(json.dumps(fresh))
+    assert all(v["status"] == "ok"
+               for v in compare_suite(metrics, fresh, good))
+    regressed_baseline = json.loads(json.dumps(fresh))
+    # baseline said the chip strategy crossed half as many bytes
+    regressed_baseline["grids"][0]["cases"][1]["interchip_bytes"] = 20.0
+    verdicts = compare_suite(metrics, fresh, regressed_baseline)
+    assert any(v["status"] == "fail" for v in verdicts)
+    (bad,) = [v for v in verdicts if v["status"] == "fail"]
+    assert bad["path"] == "grids.0.cases.1.interchip_bytes"
+
+
+def test_committed_baselines_exist_and_cover_suite_metrics():
+    """Every suite has a committed smoke baseline carrying every rtol-gated
+    metric (so the CI gate never silently no-ops)."""
+    import os
+    base_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    missing_obj = get_path({}, "nope")
+    for name, metrics in SUITES.items():
+        path = baseline_path(name, base_dir)
+        assert os.path.exists(path), f"missing committed baseline {path}"
+        with open(path) as f:
+            rec = json.load(f)
+        for m in metrics:
+            if m.rtol is not None:
+                assert get_path(rec, m.path) is not missing_obj, \
+                    f"{name}: baseline lacks {m.path}"
+
+
+def test_main_rejects_unknown_suite():
+    with pytest.raises(SystemExit):
+        main(["--suites", "bogus"])

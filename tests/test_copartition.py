@@ -1,0 +1,273 @@
+"""Chip-aware partitioning (partition→topology co-design, ISSUE 5).
+
+Covers: chip capacities respected, interchip edge tagging, the flat-topology
+bit-identity snapshot (chip-aware machinery must not move the historical
+balanced path by a single bit), ``deploy_model`` auto-selection, the
+``cut_weights`` co-partition feedback hook, chip-respecting search seeding,
+and the ``--partition chip`` CLI round-trip.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CHIP_STRATEGIES, NoC, LayerProfile,
+                        partition_model)
+from repro.core.placement import chip_init, optimize_placement
+from repro.core.topology import HierarchicalMesh
+from repro.deploy import deploy_model
+from repro.deploy.engine import resolve_partition_strategy
+from repro.deploy.objective import partition_interchip_bytes
+from repro.snn import profile_model, spike_resnet18, spike_resnet50
+
+
+def _hm(cr=2, cc=2, kr=2, kc=2):
+    return HierarchicalMesh(cr, cc, kr, kc, link_bw=8e9, core_flops=25.6e9,
+                            hop_latency=2e-8)
+
+
+def _profiles(model=spike_resnet18):
+    return profile_model(model(n_classes=10, in_res=32, T=4), batch=8,
+                         training=True)
+
+
+# ---------------------------------------------------------------------------
+# chip allocation: capacities, tagging, strategy semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", CHIP_STRATEGIES)
+def test_chip_capacity_respected(strategy):
+    hm = _hm(2, 2, 4, 4)
+    p = partition_model(_profiles(), hm.n_cores, strategy, topology=hm)
+    assert p.n == hm.n_cores
+    counts = np.bincount(p.chip_of, minlength=hm.n_chips)
+    assert (counts <= hm.chip_capacities()).all()
+    # contiguity: slices of one chip form one contiguous layer range
+    for chip in range(hm.n_chips):
+        layers = sorted({p.slices[i].layer
+                         for i in np.nonzero(p.chip_of == chip)[0]})
+        assert layers == list(range(layers[0], layers[-1] + 1))
+
+
+def test_chip_capacity_respected_more_layers_than_cores():
+    hm = _hm(2, 2, 2, 2)     # 16 cores, ResNet50 profiles ~50 units
+    prof = _profiles(spike_resnet50)
+    assert len(prof) > hm.n_cores
+    p = partition_model(prof, hm.n_cores, "chip", topology=hm)
+    assert p.n == hm.n_cores
+    assert (np.bincount(p.chip_of, minlength=hm.n_chips)
+            <= hm.chip_capacities()).all()
+
+
+def test_interchip_edge_tagging():
+    hm = _hm(2, 2, 4, 4)
+    p = partition_model(_profiles(), hm.n_cores, "chip", topology=hm)
+    g = p.to_graph()
+    assert g.chip_of is not None and np.array_equal(g.chip_of, p.chip_of)
+    mask = g.chip_cut_mask()
+    # mask is exactly: edge exists and endpoints on different chips
+    for i, j, vol in g.edges:
+        assert mask[i, j] == (p.chip_of[i] != p.chip_of[j])
+    want = sum(vol for i, j, vol in g.edges if p.chip_of[i] != p.chip_of[j])
+    assert g.chip_cut_bytes() == pytest.approx(want)
+    assert p.interchip_bytes() == pytest.approx(want)
+    assert partition_interchip_bytes(g) == pytest.approx(want)
+    # chip-oblivious partitions tag nothing
+    flat = partition_model(_profiles(), hm.n_cores, "balanced")
+    gf = flat.to_graph()
+    assert gf.chip_of is None
+    assert not gf.chip_cut_mask().any()
+    assert gf.chip_cut_bytes() == 0.0
+
+
+def test_chip_cut_first_vs_balance_first():
+    """``chip`` (latency slack band) never cuts more bytes than
+    ``chip_balanced`` (strict balance), and ``chip_balanced`` never has a
+    worse latency bucket than ``chip``."""
+    hm = _hm(2, 2, 4, 4)
+    prof = _profiles()
+    cut = partition_model(prof, hm.n_cores, "chip", topology=hm)
+    bal = partition_model(prof, hm.n_cores, "chip_balanced", topology=hm)
+    assert cut.interchip_bytes() <= bal.interchip_bytes() + 1e-9
+    assert bal.chip_loads().max() <= cut.chip_loads().max() * (1 + 1e-9)
+
+
+def test_cut_weights_feedback_moves_boundary():
+    """The co-partition hook: inflating one boundary's cut weight makes the
+    DP cut at a different layer."""
+    hm = HierarchicalMesh(1, 2, 2, 2)        # 2 chips x 4 cores
+    # 6 uniform units: the splits (2,4)/(3,3)/(4,2) tie on the latency
+    # bucket (each side holds a 1-core unit), so the cut DP is free to
+    # choose the boundary — exactly what the feedback re-weights
+    layers = [LayerProfile(f"l{i}", flops=1e9, weight_bytes=1e5,
+                           out_bytes=1e3, c_out=64) for i in range(6)]
+    base = partition_model(layers, hm.n_cores, "chip", topology=hm)
+    # out_bytes are uniform: boundary lands at the first minimal cut
+    bound_unit = max(s.layer for i, s in enumerate(base.slices)
+                     if base.chip_of[i] == 0)
+    w = np.ones(len(layers), dtype=float)
+    w[bound_unit] = 1e6                       # that cut just got expensive
+    moved = partition_model(layers, hm.n_cores, "chip", topology=hm,
+                            cut_weights=w)
+    moved_bound = max(s.layer for i, s in enumerate(moved.slices)
+                      if moved.chip_of[i] == 0)
+    assert moved_bound != bound_unit
+
+
+def test_chip_strategy_needs_topology_and_matching_cores():
+    prof = _profiles()
+    with pytest.raises(ValueError, match="needs topology"):
+        partition_model(prof, 16, "chip")
+    with pytest.raises(ValueError, match="cores"):
+        partition_model(prof, 32, "chip", topology=_hm(2, 2, 2, 2))
+    with pytest.raises(ValueError, match="unknown strategy"):
+        partition_model(prof, 16, "bogus")
+
+
+def test_chip_on_single_chip_degenerates_to_balanced():
+    prof = _profiles()
+    noc = NoC(4, 4)
+    chip = partition_model(prof, 16, "chip", topology=noc)
+    bal = partition_model(prof, 16, "balanced")
+    assert [(s.name, s.frac, s.flops) for s in chip.slices] == \
+        [(s.name, s.frac, s.flops) for s in bal.slices]
+    assert chip.strategy == "chip"
+    assert set(chip.chip_of.tolist()) == {0}
+    assert chip.interchip_bytes() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flat-topology bit-identity (snapshot generated on main before this change)
+# ---------------------------------------------------------------------------
+
+def test_flat_balanced_partition_snapshot():
+    """The default balanced partition is bit-identical to pre-chip-aware
+    main (snapshot: sha256 of the slice tuple repr)."""
+    import hashlib
+    part = partition_model(_profiles(), 16, "balanced")
+    sl = [(s.layer, s.name, s.frac, s.flops, s.weight_bytes, s.out_bytes)
+          for s in part.slices]
+    h = hashlib.sha256(repr(sl).encode()).hexdigest()
+    assert h == ("8a918a7c55981f11005ee0f104c1fbb3"
+                 "28736458b1455507934ba3afef5ffb5f")
+    assert part.chip_of is None
+
+
+def test_flat_deploy_bit_identical_snapshot():
+    """deploy_model on flat mesh/torus (default auto strategy) reproduces the
+    pre-change placements, costs and makespans exactly."""
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    plan = deploy_model(cfg, NoC(4, 4), method="simulated_annealing",
+                        budget=200, seed=0, schedule="fpdeep", n_units=4)
+    assert plan.placement.placement.tolist() == \
+        [2, 1, 5, 4, 0, 8, 11, 10, 6, 9, 13, 14, 15, 7, 3, 12]
+    assert plan.placement.comm_cost == 3864576.0
+    assert plan.schedule.makespan == 0.71420544
+    assert plan.partition.strategy == "balanced"
+    torus = deploy_model(cfg, NoC(4, 4, torus=True), method="random_search",
+                         budget=100, seed=0, schedule="layerwise", n_units=4)
+    assert torus.placement.placement.tolist() == \
+        [13, 12, 0, 6, 2, 1, 8, 7, 4, 5, 10, 15, 9, 11, 14, 3]
+    assert torus.placement.comm_cost == 4386816.0
+    assert torus.schedule.makespan == 2.400297984000004
+
+
+# ---------------------------------------------------------------------------
+# engine integration: auto-selection, seeding, co-partition loop
+# ---------------------------------------------------------------------------
+
+def test_resolve_partition_strategy():
+    assert resolve_partition_strategy("auto", NoC(4, 4)) == "balanced"
+    assert resolve_partition_strategy("auto", _hm()) == "chip"
+    assert resolve_partition_strategy("storage", _hm()) == "storage"
+
+
+def test_deploy_model_auto_selects_chip_on_hier():
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    hm = _hm(2, 2, 2, 2)
+    plan = deploy_model(cfg, hm, method="zigzag", schedule="none")
+    assert plan.partition.strategy == "chip"
+    rep = plan.report()["partition"]
+    assert rep["strategy"] == "chip"
+    assert rep["n_chips"] == 4
+    assert rep["interchip_cut_bytes"] > 0
+    # flat stays chip-oblivious and reports no chip block
+    flat = deploy_model(cfg, NoC(4, 4), method="zigzag", schedule="none")
+    assert flat.partition.strategy == "balanced"
+    assert "n_chips" not in flat.report()["partition"]
+
+
+def test_chip_init_and_search_seeding():
+    hm = _hm(2, 2, 2, 2)
+    part = partition_model(_profiles(), hm.n_cores, "chip", topology=hm)
+    g = part.to_graph()
+    init = chip_init(g, hm)
+    # injective, chip-respecting
+    assert np.unique(init).size == g.n
+    chips = hm.chip_of_array()
+    assert all(chips[init[i]] == g.chip_of[i] for i in range(g.n))
+    # placed interchip bytes of the seed == the partition's cut bytes
+    # (intra-chip XY routes never cross a boundary)
+    m = hm.evaluate(g, init)
+    assert hm.interchip_bytes(m.link_traffic) == pytest.approx(
+        g.chip_cut_bytes())
+    # searches start at (so can't do worse than) the seed under the objective
+    seed_cost = m.comm_cost
+    for method in ("simulated_annealing", "random_search", "genetic", "ppo"):
+        kw = {"pop_size": 8} if method == "genetic" else {}
+        r = optimize_placement(g, hm, method=method, budget=32, seed=0, **kw)
+        assert r.objective_cost <= seed_cost + 1e-9, method
+    # flat graph has no seed to respect
+    with pytest.raises(ValueError, match="no chip assignment"):
+        chip_init(partition_model(_profiles(), 16, "balanced").to_graph(),
+                  hm)
+
+
+def test_copartition_loop_runs_and_never_hurts():
+    cfg = spike_resnet18(n_classes=10, in_res=32, T=4)
+    hm = _hm(2, 2, 2, 2)
+    base = deploy_model(cfg, hm, method="genetic", budget=160, pop_size=8,
+                        seed=0, schedule="fpdeep", n_units=4)
+    loop = deploy_model(cfg, hm, method="genetic", budget=160, pop_size=8,
+                        seed=0, schedule="fpdeep", n_units=4,
+                        copartition_iters=2)
+    assert loop.copartition_iters >= 0
+    assert loop.placement.objective_cost <= base.placement.objective_cost + 1e-9
+    rep = loop.report()
+    assert rep["partition"]["copartition_iters"] == loop.copartition_iters
+    if loop.copartition_iters:
+        assert "copartition" in loop.stage_times_s
+    # no-op on flat topologies
+    flat = deploy_model(cfg, NoC(4, 4), method="zigzag", schedule="none",
+                        copartition_iters=3)
+    assert flat.copartition_iters == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI round-trip
+# ---------------------------------------------------------------------------
+
+def test_cli_partition_chip_roundtrip(tmp_path, capsys):
+    from repro.deploy.cli import main
+    path = tmp_path / "chip.json"
+    assert main(["--models", "spike_resnet18", "--methods", "zigzag",
+                 "--objectives", "comm_cost",
+                 "--topology", "hier:2x2:2x2,ibw=1e9",
+                 "--partition", "chip", "--copartition-iters", "1",
+                 "--schedule", "none", "--json", str(path)]) == 0
+    capsys.readouterr()
+    with open(path) as f:
+        (rep,) = json.load(f)
+    assert rep["partition"]["strategy"] == "chip"
+    assert rep["partition"]["n_chips"] == 4
+    assert rep["partition"]["interchip_cut_bytes"] >= 0
+    assert json.loads(json.dumps(rep)) == rep
+    # --strategy stays as a working alias, and "auto" resolves per topology
+    assert main(["--models", "spike_resnet18", "--methods", "zigzag",
+                 "--objectives", "comm_cost", "--cores", "16",
+                 "--strategy", "chip_balanced", "--schedule", "none",
+                 "--json", str(path)]) == 0
+    capsys.readouterr()
+    with open(path) as f:
+        (rep,) = json.load(f)
+    assert rep["partition"]["strategy"] == "chip_balanced"

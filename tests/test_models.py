@@ -1,7 +1,5 @@
 """Per-arch smoke tests (deliverable f): reduced configs, one forward/train step
 on CPU, output shapes + no NaNs; plus prefill/decode == full forward."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +8,7 @@ import pytest
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import encdec, lm
 from repro.models.encdec import EncDecConfig
-from repro.models.specs import materialize, n_params, shape_structs
+from repro.models.specs import materialize, n_params
 from repro.train.optim import AdamWConfig, adamw_init, adamw_update
 
 KEY = jax.random.PRNGKey(0)

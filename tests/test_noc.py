@@ -8,7 +8,7 @@ try:  # property tests need the dev extra; plain tests below run regardless
 except ImportError:
     HAS_HYP = False
 
-from repro.core import LogicalGraph, NoC, chain_graph, random_dag
+from repro.core import NoC, chain_graph, random_dag
 
 if HAS_HYP:
     @given(st.integers(2, 8), st.integers(2, 8), st.integers(0, 63),

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.optim import (AdamWConfig, adamw_init, adamw_update,
                                global_norm, opt_state_specs)

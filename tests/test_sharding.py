@@ -1,6 +1,5 @@
 """Sharding rules properties + multi-device integration via subprocess
 (the pytest process keeps 1 device; subprocesses get 8 host devices)."""
-import json
 import os
 import subprocess
 import sys
@@ -43,7 +42,6 @@ if HAS_HYP:
     def test_spec_partition_valid(dims_axes):
         """Never reuses a mesh axis; never shards a non-divisible dim."""
         import numpy as np
-        from jax.sharding import Mesh
         from repro.sharding.rules import BASE_RULES, spec_partition
         import jax
         # fake mesh object: only .shape is used

@@ -7,7 +7,7 @@ import pytest
 from repro.snn import (LIFConfig, init_state, lif_rollout, lif_step,
                        model_rollout, model_specs, model_step, profile_model,
                        spike, spike_resnet18, spike_resnet50, spike_vgg16)
-from repro.snn.bptt import BPTTConfig, make_optimizer, train_step
+from repro.snn.bptt import make_optimizer, train_step
 from repro.models.specs import materialize
 
 
