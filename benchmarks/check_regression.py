@@ -5,8 +5,10 @@ records to ``--out-dir`` (uploaded as CI artifacts), and compares each
 suite's *deterministic* headline metrics against the committed baselines
 ``results/BENCH_<suite>_smoke.json`` within a per-metric tolerance band.
 Timings are never gated (CI runners are too noisy); what is gated is the
-seeded search results, parity deviations, and schedule makespans — the
-quantities a code regression actually moves.
+seeded search results, parity deviations, schedule makespans, and the
+deterministic work counters from the suites' recorders (scorer dispatch /
+evaluation counts — they count algorithmic work, not time) — the quantities
+a code regression actually moves.
 
 Exit status is non-zero if any metric leaves its band (or a suite crashes),
 which fails the CI job. The bands are two-sided on purpose: an unexplained
@@ -120,6 +122,11 @@ SUITES = {
     "noc_eval": [
         Metric("parity.max_rel_diff_numpy", max_abs=1e-9),
         Metric("parity.max_rel_diff_jax", max_abs=1e-4, optional=True),
+        # observability invariants: recorder on/off must not change seeded
+        # results, and the attached run's work counters are deterministic
+        Metric("recorder_overhead.results_identical", expect=True),
+        Metric("counters.noc_batch_dispatches", rtol=DET),
+        Metric("counters.noc_batch_evals", rtol=DET),
     ],
     "ppo_pipeline": [
         Metric("pallas.matches_numpy", expect=True),
@@ -130,6 +137,11 @@ SUITES = {
         Metric("objective_demo.comm_cost.comm_cost", rtol=DET),
         Metric("objective_demo.max_link.max_link", rtol=DET),
         Metric("objective_demo.hotspot_peak_reduction", rtol=DET),
+        # deterministic work counters from the suite-wide recorder: a changed
+        # dispatch or eval count means the search loops did different work
+        Metric("counters.deploy_deployments", rtol=DET),
+        Metric("counters.noc_batch_dispatches", rtol=DET),
+        Metric("counters.noc_batch_evals", rtol=DET),
     ],
     "multichip": [
         Metric("cases.0.comm_cost", rtol=DET),                 # zigzag
@@ -140,6 +152,8 @@ SUITES = {
         Metric("cases.4.interchip_bytes", rtol=DET),
         Metric("cases.5.comm_cost", rtol=PPO_BAND),            # ppo (jax)
         Metric("cases.6.interchip_bytes", rtol=DET),           # genetic+ic
+        Metric("counters.noc_batch_dispatches", rtol=DET),
+        Metric("counters.noc_batch_evals", rtol=DET),
     ],
     "copartition": [
         Metric("grids.0.cases.0.interchip_bytes", rtol=DET),   # balanced
@@ -148,6 +162,7 @@ SUITES = {
         Metric("grids.0.cases.1.makespan_s", rtol=DET),
         Metric("grids.0.cases.1.partition_cut_bytes", rtol=DET),
         Metric("grids.0.cases.3.interchip_bytes", rtol=DET),   # chip+copart
+        Metric("counters.noc_batch_evals", rtol=DET),
     ],
 }
 

@@ -2,7 +2,6 @@
 import json
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -11,6 +10,11 @@ import numpy as np  # noqa: E402
 from repro.core import NoC, partition_model  # noqa: E402
 from repro.core.placement import optimize_placement  # noqa: E402
 from repro.core.placement.ppo import PPOConfig  # noqa: E402
+# timing primitives live in repro.obs now (single perf_counter implementation
+# across benchmarks, the deploy engine, and the optimizer driver); re-exported
+# here so every suite keeps importing them from common
+from repro.obs import (bench_percentiles, bench_time,  # noqa: E402, F401
+                       percentiles, timed)
 from repro.snn import (profile_model, spike_resnet18, spike_resnet50,  # noqa: E402
                        spike_vgg16)
 
@@ -76,16 +80,22 @@ def write_record(record, json_path, smoke: bool, default_name: str):
     return out
 
 
-def bench_time(fn, repeats: int = 1) -> float:
-    """Seconds per call, measured with the monotonic high-resolution clock
-    (time.perf_counter — time.time is wall-clock and can step backwards)."""
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats
+def write_trace(recorder, name: str, json_path, smoke: bool):
+    """Write a suite's Recorder event log as ``TRACE_<name>.jsonl`` next to
+    its JSON record (same placement protocol as :func:`write_record`: explicit
+    ``json_path`` pins the directory, full runs default to ``results/``, smoke
+    runs without a path write nothing). Returns the written path or None."""
+    if json_path is not None:
+        out_dir = os.path.dirname(json_path) or "."
+    elif not smoke:
+        out_dir = RESULTS_DIR
+    else:
+        return None
+    os.makedirs(out_dir, exist_ok=True)
+    return recorder.write_jsonl(os.path.join(out_dir, f"TRACE_{name}.jsonl"))
 
 
-def timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, (time.perf_counter() - t0) * 1e6
+def counter_record(recorder) -> dict:
+    """Recorder counters with path-safe keys (``.`` -> ``_``) so the
+    regression gate's dotted ``counters.<name>`` paths can address them."""
+    return {k.replace(".", "_"): v for k, v in recorder.counters.items()}

@@ -35,19 +35,23 @@ from __future__ import annotations
 import argparse
 import os
 
-from .common import SPIKE_MODELS, write_record  # also sets up sys.path to src
+from .common import (SPIKE_MODELS, counter_record,  # also sets up sys.path
+                     write_record, write_trace)
 from repro.core.topology import HierarchicalMesh
 from repro.deploy import deploy_model
+from repro.obs import Recorder
 
 STRATEGIES = ("balanced", "chip", "chip_balanced")
 
 
-def _case(model_cfg, hm, strategy, budget, pop, copartition_iters=0):
+def _case(model_cfg, hm, strategy, budget, pop, copartition_iters=0,
+          recorder=None):
     plan = deploy_model(model_cfg, hm, partition_strategy=strategy,
                         method="genetic", budget=budget, pop_size=pop,
                         seed=0, schedule="fpdeep", n_units=8,
                         contention_feedback=True,
-                        copartition_iters=copartition_iters)
+                        copartition_iters=copartition_iters,
+                        recorder=recorder)
     m = hm.evaluate(plan.graph, plan.placement.placement)
     rep = plan.report()
     return {
@@ -79,13 +83,15 @@ def copartition(smoke: bool = False, json_path: str | None = None):
         model, budget, pop = "S-VGG16", 2048, 64
     model_cfg = SPIKE_MODELS[model]()
 
+    recorder = Recorder()       # whole-sweep trace + deterministic counters
     record = {"smoke": smoke, "model": model, "budget": budget, "grids": []}
     rows_out = []
     by_grid = {}
     for tag, hm in grids:
-        cases = [_case(model_cfg, hm, s, budget, pop) for s in STRATEGIES]
+        cases = [_case(model_cfg, hm, s, budget, pop, recorder=recorder)
+                 for s in STRATEGIES]
         cases.append({**_case(model_cfg, hm, "chip", budget, pop,
-                              copartition_iters=2),
+                              copartition_iters=2, recorder=recorder),
                       "strategy": "chip+copart"})
         by_grid[tag] = {c["strategy"]: c for c in cases}
         record["grids"].append({"grid": tag, "topology": hm.describe(),
@@ -116,10 +122,15 @@ def copartition(smoke: bool = False, json_path: str | None = None):
         f"makespan_no_worse={acceptance['chip_makespan_no_worse']} "
         f"reduction={acceptance['interchip_reduction']:.1%}"))
 
+    record["counters"] = counter_record(recorder)
     out = write_record(record, json_path, smoke, "BENCH_copartition.json")
     if out:
         rows_out.append(("copartition.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "copartition", json_path, smoke)
+    if tr:
+        rows_out.append(("copartition.trace", 0.0,
+                         f"wrote {os.path.relpath(tr)}"))
     return rows_out
 
 

@@ -15,18 +15,22 @@ import os
 
 import numpy as np
 
-from .common import SPIKE_MODELS, make_noc, write_record
+from .common import (SPIKE_MODELS, counter_record, make_noc, write_record,
+                     write_trace)
 
 from repro.core.placement.ppo import PPOConfig  # noqa: E402
 from repro.deploy import deploy_model  # noqa: E402
+from repro.obs import Recorder  # noqa: E402
 
 ENERGY_COMBO = {"comm_cost": 1.0, "energy": 2e9}
 
 
-def _case(model_name, model_cfg, noc, method, objective, budget=None, **kw):
+def _case(model_name, model_cfg, noc, method, objective, budget=None,
+          recorder=None, **kw):
     # **kw may itself carry a cfg= (e.g. a PPOConfig) for optimize_placement
     plan = deploy_model(model_cfg, noc, method=method, objective=objective,
-                        schedule="fpdeep", n_units=8, budget=budget, **kw)
+                        schedule="fpdeep", n_units=8, budget=budget,
+                        recorder=recorder, **kw)
     rep = plan.report()
     rep["model"] = model_name
     total = sum(rep["stage_times_s"].values())
@@ -52,12 +56,18 @@ def deploy_e2e(smoke: bool = False, json_path: str | None = None):
         sa_budget = 4000
     noc = make_noc(32)
 
+    # one recorder across the whole suite: every deployment's stage spans and
+    # search trajectory land in one TRACE_deploy_e2e.jsonl artifact, and the
+    # work counters (deployments, scorer dispatches/evals) are
+    # seed-deterministic — check_regression gates them
+    recorder = Recorder()
     record = {"smoke": smoke, "cases": [], "objective_demo": {}}
     rows_out = []
     for model_name in models:
         cfg = SPIKE_MODELS[model_name]()
         for method, kw in methods:
-            _, rep = _case(model_name, cfg, noc, method, "comm_cost", **kw)
+            _, rep = _case(model_name, cfg, noc, method, "comm_cost",
+                           recorder=recorder, **kw)
             record["cases"].append(rep)
             st = rep["stage_times_s"]
             rows_out.append((
@@ -77,7 +87,7 @@ def deploy_e2e(smoke: bool = False, json_path: str | None = None):
     by_obj = {}
     for objective in ("comm_cost", "max_link", ENERGY_COMBO):
         plan, rep = _case(demo_model, cfg, noc, "simulated_annealing",
-                          objective, budget=sa_budget)
+                          objective, budget=sa_budget, recorder=recorder)
         key = rep["placement"]["objective"]
         by_obj[key] = (plan, rep)
         record["objective_demo"][key] = rep["placement"]
@@ -94,10 +104,19 @@ def deploy_e2e(smoke: bool = False, json_path: str | None = None):
         f"max_link obj cuts peak link x{reduction:.2f} vs comm optimum "
         f"(placements_differ={placements_differ})"))
 
+    record["counters"] = counter_record(recorder)
+    rows_out.append(("deploy_e2e.counters", 0.0,
+                     " ".join(f"{k}={v:g}"
+                              for k, v in sorted(record["counters"].items()))))
+
     out = write_record(record, json_path, smoke, "BENCH_deploy_e2e.json")
     if out:
         rows_out.append(("deploy_e2e.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "deploy_e2e", json_path, smoke)
+    if tr:
+        rows_out.append(("deploy_e2e.trace", 0.0,
+                         f"wrote {os.path.relpath(tr)}"))
     return rows_out
 
 

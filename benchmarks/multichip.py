@@ -27,18 +27,22 @@ from __future__ import annotations
 import argparse
 import os
 
-from .common import model_graph, write_record  # also sets up sys.path to src
+from .common import (counter_record, model_graph,  # also sets up sys.path
+                     write_record, write_trace)
 from repro.core import HierarchicalMesh
 from repro.core.placement import optimize_placement
 from repro.core.placement.ppo import PPOConfig
 from repro.deploy.objective import as_objective
+from repro.obs import Recorder
 
 FLAT_BASELINES = ("zigzag", "sigmate", "random_search")
 
 
-def _case(graph, hm, method, budget, objective="comm_cost", **kw):
+def _case(graph, hm, method, budget, objective="comm_cost", recorder=None,
+          **kw):
     res = optimize_placement(graph, hm, method=method, budget=budget,
-                             seed=0, objective=objective, **kw)
+                             seed=0, objective=objective, recorder=recorder,
+                             **kw)
     m = hm.evaluate(graph, res.placement)
     energy = as_objective("energy").from_metrics(m, hm)
     return {
@@ -69,18 +73,20 @@ def multichip(smoke: bool = False, json_path: str | None = None):
         pop = 64
     graph, _ = model_graph(model, hm.n_cores)
 
+    recorder = Recorder()       # whole-sweep trace + deterministic counters
     cases = []
     for method, kw in [("zigzag", {}), ("sigmate", {}),
                        ("random_search", {}),
                        ("simulated_annealing", {}),
                        ("genetic", {"pop_size": pop}),
                        ("ppo", {"cfg": ppo_cfg})]:
-        cases.append(_case(graph, hm, method, budget, **kw))
+        cases.append(_case(graph, hm, method, budget, recorder=recorder,
+                           **kw))
     # chip-aware genetic: penalize boundary crossings directly
     ic_w = 2.0
     chip_aware = _case(graph, hm, "genetic", budget,
                        objective={"comm_cost": 1.0, "interchip": ic_w},
-                       pop_size=pop)
+                       pop_size=pop, recorder=recorder)
     cases.append(chip_aware)
 
     by = {c["method"]: c for c in cases if c["objective"] == "comm_cost"}
@@ -100,6 +106,7 @@ def multichip(smoke: bool = False, json_path: str | None = None):
         "budget": budget,
         "cases": cases,
         "acceptance": acceptance,
+        "counters": counter_record(recorder),
     }
     rows = []
     for c in cases:
@@ -119,6 +126,9 @@ def multichip(smoke: bool = False, json_path: str | None = None):
     out = write_record(record, json_path, smoke, "BENCH_multichip.json")
     if out:
         rows.append(("multichip.json", 0.0, f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "multichip", json_path, smoke)
+    if tr:
+        rows.append(("multichip.trace", 0.0, f"wrote {os.path.relpath(tr)}"))
     return rows
 
 

@@ -30,12 +30,54 @@ import time
 
 import numpy as np
 
-from .common import bench_time as _time, write_record
+from .common import (bench_percentiles, bench_time as _time, counter_record,
+                     write_record, write_trace)
 from repro.core import NoC, random_dag
 from repro.core import noc_batch
+from repro.obs import Recorder
 
 POPS = (1, 16, 64, 256)
 TOPOLOGIES = ((8, 8, False), (16, 16, True))
+
+
+def _recorder_overhead_block(smoke: bool):
+    """Observability-cost block: population SA timed detached (recorder=None,
+    the production hot path) vs with a Recorder attached, plus the attached
+    run's deterministic work counters and per-call latency percentiles of the
+    batch scorer. The detached timing is the suite's evidence that the
+    instrumentation hooks stay out of the hot loop (<2% is the budget the
+    observability PR claims); the counters are seed-deterministic and gated
+    by check_regression."""
+    from repro.core.placement.population import simulated_annealing_population
+
+    noc = NoC(4, 4) if smoke else NoC(8, 8)
+    graph = random_dag(noc.n_cores, p=0.15, seed=0)
+    iters, pop = (60, 8) if smoke else (400, 16)
+
+    def run(recorder=None):
+        return simulated_annealing_population(
+            graph, noc, iters=iters, pop_size=pop, seed=0, recorder=recorder)
+
+    run()                                     # warm the route-table cache
+    repeats = 3 if smoke else 5
+    off_s = _time(run, repeats=repeats)
+    rec = Recorder()
+    on_s = _time(lambda: run(rec), repeats=repeats)
+    best_off = run()
+    best_on = run(Recorder())
+    # per-call latency distribution of the optimizer-facing scorer (p50/p99
+    # is the serving-style summary a placement service would report)
+    score = noc_batch.make_scorer(noc, graph, "batch")
+    P = np.stack([np.random.default_rng(3).permutation(noc.n_cores)
+                  for _ in range(pop)])
+    lat = bench_percentiles(lambda: score(P), repeats=30, warmup=2)
+    return {
+        "iters": iters, "pop_size": pop,
+        "off_s": off_s, "on_s": on_s,
+        "on_overhead_frac": on_s / max(off_s, 1e-12) - 1.0,
+        "results_identical": bool(np.array_equal(best_off, best_on)),
+        "scorer_latency_s": lat,
+    }, rec
 
 
 def _parity_block():
@@ -152,6 +194,21 @@ def noc_eval(smoke: bool = False, json_path: str | None = None):
             fused_rec["objectives"][objective] = obj_rec
         record["fused_objective"] = fused_rec
 
+    # ---- observability cost + deterministic work counters -----------------
+    obs_rec, recorder = _recorder_overhead_block(smoke)
+    record["recorder_overhead"] = obs_rec
+    record["counters"] = counter_record(recorder)
+    lat = obs_rec["scorer_latency_s"]
+    rows_out.append((
+        "noc_eval.recorder_overhead", obs_rec["on_s"] * 1e6,
+        f"off={obs_rec['off_s']*1e3:.2f}ms on={obs_rec['on_s']*1e3:.2f}ms "
+        f"overhead={obs_rec['on_overhead_frac']:+.1%} "
+        f"identical={obs_rec['results_identical']}"))
+    rows_out.append((
+        "noc_eval.scorer_latency", lat["p50"] * 1e6,
+        f"p50={lat['p50']*1e6:.1f}us p99={lat['p99']*1e6:.1f}us "
+        f"n={lat['n']}"))
+
     p = record["parity"]
     rows_out.append(("noc_eval.parity", 0.0,
                      " ".join(f"{k}={v:.2e}" for k, v in p.items())))
@@ -160,6 +217,9 @@ def noc_eval(smoke: bool = False, json_path: str | None = None):
     if out:
         rows_out.append(("noc_eval.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "noc_eval", json_path, smoke)
+    if tr:
+        rows_out.append(("noc_eval.trace", 0.0, f"wrote {os.path.relpath(tr)}"))
     return rows_out
 
 

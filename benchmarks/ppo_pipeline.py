@@ -24,7 +24,9 @@ import os
 
 import numpy as np
 
-from .common import bench_time, write_record
+from .common import bench_time, write_record, write_trace
+
+from repro.obs import Recorder  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -161,8 +163,11 @@ def ppo_pipeline(smoke: bool = False, json_path: str | None = None):
     if not record["pallas"]["matches_numpy"]:   # fail before the slow sweeps
         raise RuntimeError("pallas link traffic diverged from numpy backend")
     rows_out = []
+    recorder = Recorder()       # per-case spans -> TRACE_ppo_pipeline.jsonl
     for (r, c, t, b) in cases:
-        case = _bench_case(r, c, t, b, ppo_epochs, repeats)
+        with recorder.span(f"ppo_pipeline.{r}x{c}{'t' if t else ''}.b{b}",
+                           batch=b):
+            case = _bench_case(r, c, t, b, ppo_epochs, repeats)
         record["cases"].append(case)
         rows_out.append((
             f"ppo_pipeline.{r}x{c}{'t' if t else ''}.b{b}",
@@ -177,6 +182,10 @@ def ppo_pipeline(smoke: bool = False, json_path: str | None = None):
     if out:
         rows_out.append(("ppo_pipeline.json", 0.0,
                          f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "ppo_pipeline", json_path, smoke)
+    if tr:
+        rows_out.append(("ppo_pipeline.trace", 0.0,
+                         f"wrote {os.path.relpath(tr)}"))
     return rows_out
 
 

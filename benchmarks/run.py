@@ -1,5 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -10,6 +12,9 @@ def main() -> None:
     ap.add_argument("--only", default="", help="substring filter")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower placement sweeps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a per-suite run record (status, seconds, "
+                         "error, rows) to PATH")
     args = ap.parse_args()
 
     from . import (copartition, deploy_e2e, multichip, noc_eval, paper_figs,
@@ -37,24 +42,45 @@ def main() -> None:
     # x objective (multichip includes a PPO run on 64 cores)
     fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip"}
     print("name,us_per_call,derived")
-    failures = 0
+    suites = []          # per-suite run records (the --json artifact)
+    failed = []
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
         if args.fast and name in fast_skip:
             continue
         t0 = time.time()
+        rec = {"suite": name, "status": "ok", "rows": [], "error": None}
         try:
             rows = fn()
             for (rname, us, derived) in rows:
                 print(f"{rname},{us:.1f},{derived}")
+                rec["rows"].append({"name": rname, "us_per_call": float(us),
+                                    "derived": str(derived)})
         except Exception as e:  # noqa: BLE001
-            failures += 1
+            failed.append(name)
             traceback.print_exc()
+            rec["status"] = "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
             print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
-        sys.stderr.write(f"[bench {name}: {time.time()-t0:.1f}s]\n")
-    if failures:
+        rec["seconds"] = round(time.time() - t0, 3)
+        suites.append(rec)
+        sys.stderr.write(f"[bench {name}: {rec['seconds']:.1f}s]\n")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"suites": suites,
+                       "n_failed": len(failed), "failed": failed}, f,
+                      indent=2)
+        sys.stderr.write(f"[bench record: {args.json}]\n")
+    # a loud final verdict either way — a failing suite must not scroll away
+    # as one CSV row in the middle of the output
+    n = len(suites)
+    if failed:
+        print(f"# FAILED {len(failed)}/{n} suites: {', '.join(failed)}")
         sys.exit(1)
+    print(f"# OK {n}/{n} suites")
 
 
 if __name__ == '__main__':

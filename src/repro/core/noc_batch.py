@@ -661,8 +661,29 @@ def validate_placements(noc: Topology, placements, n_nodes: int) -> np.ndarray:
 SCORER_BACKENDS = ("batch", "numpy", "jax", "pallas", "auto", "reference")
 
 
+def _counted_scorer(score, recorder, backend: str, objective_name: str,
+                    fused: bool):
+    """Wrap a scorer with :class:`repro.obs.Recorder` dispatch/eval counters.
+
+    One ``noc_batch.dispatches`` increment per call and one
+    ``noc_batch.evals`` increment per placement scored — deterministic
+    counters (they count algorithmic work, not wall time), which is what lets
+    the CI regression gate pin them. The wrapper exists only when a recorder
+    is attached, so the detached hot path keeps the bare closure.
+    """
+    recorder.event("noc_batch.scorer", backend=backend,
+                   objective=objective_name, fused=fused)
+
+    def counted(placements):
+        out = score(placements)
+        recorder.count("noc_batch.dispatches")
+        recorder.count("noc_batch.evals", int(np.asarray(out).shape[0]))
+        return out
+    return counted
+
+
 def make_scorer(noc: Topology, graph: LogicalGraph, backend: str = "batch",
-                objective="comm_cost"):
+                objective="comm_cost", recorder=None):
     """Build ``placements [B, n] -> score [B]`` for the hot loops.
 
     ``backend="batch"`` keeps optimizer trajectories bit-identical to the
@@ -678,21 +699,34 @@ def make_scorer(noc: Topology, graph: LogicalGraph, backend: str = "batch",
     ``{metric: weight}`` dict) dispatches to the full-metrics objective scorer
     of :mod:`repro.deploy.objective` (which fuses the metric graph into one
     device dispatch on the jax/pallas backends).
+
+    ``recorder`` (a :class:`repro.obs.Recorder`) wraps the scorer with
+    deterministic dispatch/eval counters and records which backend /
+    objective / fusion path was built; ``None`` returns the bare closure
+    (zero overhead — the historical hot path).
     """
     if backend not in SCORER_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"choose from {SCORER_BACKENDS}")
+    obj_name = "comm_cost"
     if objective not in (None, "comm_cost"):
         # deploy sits above core in the layering — import lazily to keep
         # `import repro.core` light and cycle-free
         from ..deploy.objective import as_objective, objective_scorer
         obj = as_objective(objective)
         if not obj.is_comm_cost:
-            return objective_scorer(noc, graph, obj, backend)
+            score = objective_scorer(noc, graph, obj, backend)
+            if recorder is None:
+                return score
+            fused = (backend in ("jax", "pallas") and HAS_JAX)
+            return _counted_scorer(score, recorder, backend, obj.name, fused)
     if backend == "reference":
         def score_ref(placements):
             P = np.atleast_2d(np.asarray(placements, dtype=int))
             return np.array([noc.evaluate(graph, p).comm_cost for p in P])
+        if recorder is not None:
+            return _counted_scorer(score_ref, recorder, backend, obj_name,
+                                   False)
         return score_ref
     b = batched_noc(noc)
     # Bind the edge arrays once — scorers are called per optimizer step (B=1
@@ -723,4 +757,6 @@ def make_scorer(noc: Topology, graph: LogicalGraph, backend: str = "batch",
             if P.shape[0] == 0 or src.size == 0:
                 return np.zeros(P.shape[0])
             return (hops[P[:, src], P[:, dst]] * vol[None, :]).sum(axis=1)
+    if recorder is not None:
+        return _counted_scorer(score, recorder, backend, obj_name, False)
     return score

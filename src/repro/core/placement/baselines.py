@@ -82,40 +82,49 @@ def _serpentine(cores: np.ndarray, noc) -> np.ndarray:
 
 def random_search(graph, noc, iters: int = 2000, seed: int = 0,
                   backend: str = "batch",
-                  objective="comm_cost", init=None) -> np.ndarray:
+                  objective="comm_cost", init=None,
+                  recorder=None) -> np.ndarray:
     """Paper's RS baseline: sample random injective placements, keep the best
     (under ``objective`` — comm cost by default, see repro.deploy.objective).
     ``init``, when given, is scored as candidate zero (before any RNG draw,
     so the sampling stream is unchanged) — the chip-respecting seeding hook.
+    ``recorder`` emits one ``rs.iter`` event per candidate (cost, best) —
+    detached it costs one None-check per iteration and the RNG stream (and
+    so the result) is untouched.
     """
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend, objective)
+    score = make_scorer(noc, graph, backend, objective, recorder=recorder)
     best, best_cost = None, np.inf
     if init is not None:
         init = np.asarray(init, dtype=int)
         validate_placements(noc, init, graph.n)
         best, best_cost = init, float(score(init[None, :])[0])
-    for _ in range(iters):
+    for it in range(iters):
         p = rng.permutation(noc.n_cores)[:graph.n]
         c = float(score(p[None, :])[0])
         if c < best_cost:
             best, best_cost = p, c
+        if recorder is not None:
+            recorder.event("rs.iter", iter=it, cost=c, best_cost=best_cost)
     return best
 
 
 def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
                         t_end_frac: float = 1e-3, seed: int = 0,
                         init=None, backend: str = "batch",
-                        objective="comm_cost") -> np.ndarray:
+                        objective="comm_cost", recorder=None) -> np.ndarray:
     """Pairwise-swap SA over placements (beyond-paper local-search reference,
     cf. cyclic RL+SA placement [Vashisht et al. 2020]).
 
     Temperature starts at ``t0 × initial_cost`` and decays geometrically to
     ``t_end_frac`` of that over ``iters`` steps. ``objective`` selects the
     annealed score (comm cost by default; any repro.deploy.objective spec).
+    ``recorder`` emits exactly one ``sa.iter`` event per step (current/best
+    cost, temperature, accepted flag) and counts accepted moves; detached it
+    costs one None-check per step and the trajectory is bit-identical.
     """
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend, objective)
+    score = make_scorer(noc, graph, backend, objective, recorder=recorder)
     cur = np.array(init if init is not None else zigzag(graph.n, noc))
     validate_placements(noc, cur, graph.n)   # reject bad user-supplied init
     # extend with free cores so swaps can move nodes to empty cells
@@ -126,19 +135,31 @@ def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
     best, best_cost = slots[:n].copy(), cost
     t = max(t0 * max(cost, 1.0), 1e-9)
     cooling = t_end_frac ** (1.0 / max(iters, 1))
-    for _ in range(iters):
+    for it in range(iters):
+        accepted = False
         i, j = rng.integers(0, len(slots), 2)
         if i == j or (i >= n and j >= n):
+            if recorder is not None:
+                recorder.event("sa.iter", iter=it, cost=cost,
+                               best_cost=best_cost, temperature=t,
+                               accepted=False, proposed=False)
             continue
         slots[i], slots[j] = slots[j], slots[i]
         new_cost = float(score(slots[None, :n])[0])
         if new_cost <= cost or rng.random() < np.exp((cost - new_cost) / max(t, 1e-9)):
             cost = new_cost
+            accepted = True
             if cost < best_cost:
                 best, best_cost = slots[:n].copy(), cost
         else:
             slots[i], slots[j] = slots[j], slots[i]
         t *= cooling
+        if recorder is not None:
+            recorder.event("sa.iter", iter=it, cost=cost,
+                           best_cost=best_cost, temperature=t,
+                           accepted=accepted, proposed=True)
+            if accepted:
+                recorder.count("sa.accepted")
     return best
 
 

@@ -27,11 +27,11 @@ changes.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
 from ...deploy.objective import as_objective
+from ...obs import maybe_span
 from . import baselines, population
 from .policy_baseline import PolicyConfig, run_policy_baseline
 from .ppo import PPOConfig, run_ppo
@@ -83,11 +83,18 @@ def _chip_seed(graph, noc):
 
 def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                        budget: int | None = None, backend: str | None = None,
-                       objective=None, **kw) -> PlacementResult:
+                       objective=None, recorder=None, **kw) -> PlacementResult:
     """``backend=None`` / ``objective=None`` mean the defaults ("batch" /
     "comm_cost" — and for ppo/policy, a caller-supplied ``cfg`` keeps its own
     values); an explicit value overrides everywhere, including a passed
     ``cfg``.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`) turns on search-trajectory
+    telemetry: the whole dispatch runs inside a ``place.<method>`` span,
+    every search method emits per-iteration events (cost, best-so-far,
+    acceptance/temperature/diversity where meaningful), and the scorer counts
+    evaluations and dispatches. Detached (``None``, the default) the hooks
+    cost one pointer comparison per iteration and results are bit-identical.
 
     On a multi-chip topology with a chip-aware partition (``graph.chip_of``),
     the searches are seeded with :func:`baselines.chip_init` — slices
@@ -98,7 +105,6 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     ``init=`` kwarg always wins. The deterministic flat constructors
     (``zigzag``/``sigmate``/``greedy``) stay chip-oblivious baselines.
     """
-    t0 = time.perf_counter()
     history = None
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
@@ -109,79 +115,83 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                  if method in init_methods + ("ppo", "policy") else None)
     if chip_seed is not None and method in init_methods:
         kw.setdefault("init", chip_seed)
-    if method == "zigzag":
-        placement = baselines.zigzag(graph.n, noc)
-    elif method == "sigmate":
-        placement = baselines.sigmate(graph.n, noc)
-    elif method == "random_search":
-        placement = baselines.random_search(
-            graph, noc, iters=kw.pop("iters", None) or budget or 2000,
-            seed=seed, backend=bk, objective=ob, **kw)
-    elif method == "simulated_annealing":
-        placement = baselines.simulated_annealing(
-            graph, noc, iters=kw.pop("iters", None) or budget or 5000,
-            seed=seed, backend=bk, objective=ob, **kw)
-    elif method == "population_random_search":
-        placement = population.random_search_population(
-            graph, noc, iters=kw.pop("iters", None) or budget or 2000,
-            seed=seed, backend=bk, objective=ob, **kw)
-    elif method == "population_simulated_annealing":
-        # budget counts total evaluations for every method; population SA
-        # performs pop_size evaluations per lock-step iteration
-        pop = max(1, kw.get("pop_size", 16))
-        iters = kw.pop("iters", None) or max(1, (budget or 16000) // pop)
-        placement = population.simulated_annealing_population(
-            graph, noc, iters=iters, seed=seed, backend=bk, objective=ob, **kw)
-    elif method == "genetic":
-        # one whole-population scoring call per generation (+ the initial
-        # one), so budgets below 2*pop_size still spend up to 2*pop_size
-        # evaluations — the same at-least-one-round floor as population SA;
-        # genetic_population validates pop_size itself
-        pop = kw.setdefault("pop_size", 64)
-        gens = kw.pop("generations", None)
-        if gens is None:
-            gens = max(1, (budget or 6400) // max(pop, 1) - 1)
-        placement = population.genetic_population(
-            graph, noc, generations=gens, seed=seed, backend=bk,
-            objective=ob, **kw)
-    elif method == "greedy":
-        placement = baselines.greedy(graph, noc)
-    elif method == "policy":
-        cfg = kw.pop("cfg", None)
-        if cfg is None:
-            cfg = PolicyConfig(iterations=budget or 40, seed=seed, backend=bk,
-                               objective=ob, **kw)
+    with maybe_span(recorder, f"place.{method}", seed=seed,
+                    backend=bk) as sp:
+        if method == "zigzag":
+            placement = baselines.zigzag(graph.n, noc)
+        elif method == "sigmate":
+            placement = baselines.sigmate(graph.n, noc)
+        elif method == "random_search":
+            placement = baselines.random_search(
+                graph, noc, iters=kw.pop("iters", None) or budget or 2000,
+                seed=seed, backend=bk, objective=ob, recorder=recorder, **kw)
+        elif method == "simulated_annealing":
+            placement = baselines.simulated_annealing(
+                graph, noc, iters=kw.pop("iters", None) or budget or 5000,
+                seed=seed, backend=bk, objective=ob, recorder=recorder, **kw)
+        elif method == "population_random_search":
+            placement = population.random_search_population(
+                graph, noc, iters=kw.pop("iters", None) or budget or 2000,
+                seed=seed, backend=bk, objective=ob, recorder=recorder, **kw)
+        elif method == "population_simulated_annealing":
+            # budget counts total evaluations for every method; population SA
+            # performs pop_size evaluations per lock-step iteration
+            pop = max(1, kw.get("pop_size", 16))
+            iters = kw.pop("iters", None) or max(1, (budget or 16000) // pop)
+            placement = population.simulated_annealing_population(
+                graph, noc, iters=iters, seed=seed, backend=bk, objective=ob,
+                recorder=recorder, **kw)
+        elif method == "genetic":
+            # one whole-population scoring call per generation (+ the initial
+            # one), so budgets below 2*pop_size still spend up to 2*pop_size
+            # evaluations — the same at-least-one-round floor as population
+            # SA; genetic_population validates pop_size itself
+            pop = kw.setdefault("pop_size", 64)
+            gens = kw.pop("generations", None)
+            if gens is None:
+                gens = max(1, (budget or 6400) // max(pop, 1) - 1)
+            placement = population.genetic_population(
+                graph, noc, generations=gens, seed=seed, backend=bk,
+                objective=ob, recorder=recorder, **kw)
+        elif method == "greedy":
+            placement = baselines.greedy(graph, noc)
+        elif method == "policy":
+            cfg = kw.pop("cfg", None)
+            if cfg is None:
+                cfg = PolicyConfig(iterations=budget or 40, seed=seed,
+                                   backend=bk, objective=ob, **kw)
+            else:
+                cfg = _override_cfg(cfg, backend, objective)
+            out = run_policy_baseline(graph, noc, cfg, recorder=recorder)
+            placement, history = out["best_placement"], out["history"]
+            ob = cfg.objective
+        elif method == "ppo":
+            cfg = kw.pop("cfg", None)
+            if cfg is None:
+                cfg = PPOConfig(iterations=budget or 40, seed=seed,
+                                backend=bk, objective=ob, **kw)
+            else:
+                cfg = _override_cfg(cfg, backend, objective)
+            st = run_ppo(graph, noc, cfg, recorder=recorder)
+            placement, history = st.best_placement, st.history
+            ob = cfg.objective
         else:
-            cfg = _override_cfg(cfg, backend, objective)
-        out = run_policy_baseline(graph, noc, cfg)
-        placement, history = out["best_placement"], out["history"]
-        ob = cfg.objective
-    elif method == "ppo":
-        cfg = kw.pop("cfg", None)
-        if cfg is None:
-            cfg = PPOConfig(iterations=budget or 40, seed=seed, backend=bk,
-                            objective=ob, **kw)
-        else:
-            cfg = _override_cfg(cfg, backend, objective)
-        st = run_ppo(graph, noc, cfg)
-        placement, history = st.best_placement, st.history
-        ob = cfg.objective
-    else:
-        raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+            raise ValueError(f"unknown method {method!r}; "
+                             f"choose from {METHODS}")
 
-    obj = as_objective(ob)
-    m = noc.evaluate(graph, placement)
-    if chip_seed is not None and method in ("ppo", "policy"):
-        # RL methods have no init hook; seed them by including the
-        # chip-respecting constructor in the best-of candidate set
-        m_seed = noc.evaluate(graph, chip_seed)
-        if obj.from_metrics(m_seed, noc) < obj.from_metrics(m, noc):
-            placement, m = chip_seed, m_seed
+        obj = as_objective(ob)
+        m = noc.evaluate(graph, placement)
+        if chip_seed is not None and method in ("ppo", "policy"):
+            # RL methods have no init hook; seed them by including the
+            # chip-respecting constructor in the best-of candidate set
+            m_seed = noc.evaluate(graph, chip_seed)
+            if obj.from_metrics(m_seed, noc) < obj.from_metrics(m, noc):
+                placement, m = chip_seed, m_seed
     return PlacementResult(
         method=method, placement=np.asarray(placement),
         comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,
         throughput=m.throughput, max_link=m.max_link,
-        wall_time_s=time.perf_counter() - t0, history=history,
+        wall_time_s=sp.duration_s, history=history,
         objective=obj.name, objective_cost=obj.from_metrics(m, noc))
 
 

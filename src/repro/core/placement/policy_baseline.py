@@ -99,13 +99,15 @@ def _reinforce_update(params, opt, feats, placements, advantages,
     return params, opt, l
 
 
-def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
+def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig(),
+                        recorder=None):
     key = jax.random.PRNGKey(cfg.seed)
     feats = jnp.asarray(graph.node_features(), jnp.float32)
     params = materialize(key, policy_specs(feats.shape[1], noc.n_cores, cfg.d_hidden))
     adam = AdamWConfig(lr=cfg.lr)     # hoisted: static jit arg, one instance
     opt = adamw_init(params, adam)
-    score = make_scorer(noc, graph, cfg.backend, cfg.objective)
+    score = make_scorer(noc, graph, cfg.backend, cfg.objective,
+                        recorder=recorder)
     baseline = None
     best_cost, best_placement = np.inf, None
     history = []
@@ -126,5 +128,7 @@ def run_policy_baseline(graph, noc, cfg: PolicyConfig = PolicyConfig()):
                                            adam)
         history.append({"iter": it, "mean_cost": float(costs.mean()),
                         "best_cost": best_cost, "loss": float(l)})
+        if recorder is not None:
+            recorder.event("policy.iter", **history[-1])
     return {"best_cost": best_cost, "best_placement": best_placement,
             "history": history}

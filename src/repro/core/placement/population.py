@@ -31,7 +31,8 @@ from .baselines import sigmate, zigzag
 def random_search_population(graph, noc, iters: int = 2000,
                              pop_size: int = 256, seed: int = 0,
                              backend: str = "batch",
-                             objective="comm_cost", init=None) -> np.ndarray:
+                             objective="comm_cost", init=None,
+                             recorder=None) -> np.ndarray:
     """Paper's RS baseline, scored ``pop_size`` placements at a time.
 
     Consumes the RNG stream exactly like the sequential version (one
@@ -43,13 +44,14 @@ def random_search_population(graph, noc, iters: int = 2000,
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
-    score = make_scorer(noc, graph, backend, objective)
+    score = make_scorer(noc, graph, backend, objective, recorder=recorder)
     best, best_cost = None, np.inf
     if init is not None:
         init = np.asarray(init, dtype=int)
         validate_placements(noc, init, graph.n)
         best, best_cost = init, float(score(init[None, :])[0])
     done = 0
+    batch_idx = 0
     while done < iters:
         k = min(pop_size, iters - done)
         perms = np.stack([rng.permutation(noc.n_cores)[:graph.n]
@@ -59,6 +61,12 @@ def random_search_population(graph, noc, iters: int = 2000,
         if costs[i] < best_cost:
             best, best_cost = perms[i].copy(), float(costs[i])
         done += k
+        if recorder is not None:
+            recorder.event("population_rs.batch", batch=batch_idx,
+                           evaluated=done, batch_min=float(costs[i]),
+                           batch_mean=float(costs.mean()),
+                           best_cost=best_cost)
+        batch_idx += 1
     return best
 
 
@@ -66,18 +74,22 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
                                    pop_size: int = 16, t0: float = 0.05,
                                    t_end_frac: float = 1e-3, seed: int = 0,
                                    init=None, backend: str = "batch",
-                                   objective="comm_cost") -> np.ndarray:
+                                   objective="comm_cost",
+                                   recorder=None) -> np.ndarray:
     """``pop_size`` independent pairwise-swap SA chains, batch-scored per step.
 
     Each step performs one proposed swap per chain (``pop_size`` evaluations
     per step, so ``iters × pop_size`` total — compare budgets accordingly).
     ``objective`` selects the annealed score (repro.deploy.objective spec).
+    ``recorder`` emits one ``population_sa.iter`` event per lock-step
+    iteration (best/mean cost, per-step acceptance fraction, mean
+    temperature); detached the loop is untouched.
     """
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
     n, n_cores = graph.n, noc.n_cores
-    score = make_scorer(noc, graph, backend, objective)
+    score = make_scorer(noc, graph, backend, objective, recorder=recorder)
 
     base = np.asarray(init if init is not None else zigzag(n, noc), dtype=int)
     validate_placements(noc, base, n)        # reject bad user-supplied init
@@ -93,7 +105,7 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
     t = np.maximum(t0 * np.maximum(cost, 1.0), 1e-9)
     cooling = t_end_frac ** (1.0 / max(iters, 1))
     rows = np.arange(pop_size)
-    for _ in range(iters):
+    for it in range(iters):
         i = rng.integers(0, n_cores, pop_size)
         j = rng.integers(0, n_cores, pop_size)
         valid = ~((i == j) | ((i >= n) & (j >= n)))
@@ -109,6 +121,12 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
         if cost[i1] < best_cost:
             best, best_cost = slots[i1, :n].copy(), float(cost[i1])
         t *= cooling
+        if recorder is not None:
+            recorder.event("population_sa.iter", iter=it,
+                           best_cost=best_cost, cur_min=float(cost[i1]),
+                           cur_mean=float(cost.mean()),
+                           accept_frac=float(accept.mean()),
+                           temperature=float(t.mean()))
     return best
 
 
@@ -141,7 +159,7 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
                        elite_frac: float = 0.125, tournament: int = 3,
                        crossover_rate: float = 0.9, mutation_rate: float = 0.6,
                        seed: int = 0, init=None, backend: str = "batch",
-                       objective="comm_cost") -> np.ndarray:
+                       objective="comm_cost", recorder=None) -> np.ndarray:
     """Evolutionary placement search, whole population scored per generation.
 
     Chromosomes are full core permutations (length ``noc.n_cores``; the first
@@ -153,7 +171,10 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
     (:func:`_ox_crossover`) + pairwise-swap mutation (each child takes another
     swap with probability ``mutation_rate`` — a geometric number of swaps,
     ~1.5 expected at the 0.6 default). The total evaluation budget is
-    ``(generations + 1) × pop_size``.
+    ``(generations + 1) × pop_size``. ``recorder`` emits one ``ga.gen`` event
+    per generation (best/mean cost plus a population-diversity index: the
+    mean fraction of placement slots differing from the generation's best
+    individual); detached the search is untouched.
     """
     if pop_size < 2:
         raise ValueError(f"pop_size must be >= 2, got {pop_size}")
@@ -161,7 +182,7 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
         raise ValueError(f"tournament must be >= 1, got {tournament}")
     rng = np.random.default_rng(seed)
     n, n_cores = graph.n, noc.n_cores
-    score = make_scorer(noc, graph, backend, objective)
+    score = make_scorer(noc, graph, backend, objective, recorder=recorder)
 
     def full_perm(placement) -> np.ndarray:
         placement = np.asarray(placement, dtype=int)
@@ -182,8 +203,13 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
     cost = score(slots[:, :n])
     i0 = int(np.argmin(cost))
     best, best_cost = slots[i0, :n].copy(), float(cost[i0])
+    if recorder is not None:
+        recorder.event("ga.gen", gen=-1, best_cost=best_cost,
+                       cur_min=float(cost[i0]), cur_mean=float(cost.mean()),
+                       diversity=float(
+                           (slots[:, :n] != slots[i0, :n]).mean()))
 
-    for _ in range(generations):
+    for gen in range(generations):
         order = np.argsort(cost, kind="stable")
         nxt = np.empty_like(slots)
         nxt[:n_elite] = slots[order[:n_elite]]
@@ -208,4 +234,10 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
         i1 = int(np.argmin(cost))
         if cost[i1] < best_cost:
             best, best_cost = slots[i1, :n].copy(), float(cost[i1])
+        if recorder is not None:
+            recorder.event("ga.gen", gen=gen, best_cost=best_cost,
+                           cur_min=float(cost[i1]),
+                           cur_mean=float(cost.mean()),
+                           diversity=float(
+                               (slots[:, :n] != slots[i1, :n]).mean()))
     return best

@@ -137,8 +137,13 @@ class PPOState:
 
 
 def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
-            priority=None) -> PPOState:
-    """Optimize a placement of ``graph`` on ``noc`` with PPO. Returns best found."""
+            priority=None, recorder=None) -> PPOState:
+    """Optimize a placement of ``graph`` on ``noc`` with PPO. Returns best found.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`) emits one ``ppo.iter`` event
+    per iteration — mean/min rollout cost, best-so-far, and the PPO policy /
+    value losses — plus scoring dispatch counters; the training trajectory is
+    bit-identical with or without it (no RNG or float path touched)."""
     key = jax.random.PRNGKey(cfg.seed)
     lap = jnp.asarray(graph.laplacian(), jnp.float32)
     feats = jnp.asarray(graph.node_features(), jnp.float32)
@@ -157,7 +162,8 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
             noc.evaluate(graph, zigzag(graph.n, noc)), noc)
     baseline_cost = max(baseline_cost, 1e-12)
 
-    score = make_scorer(noc, graph, cfg.backend, cfg.objective)
+    score = make_scorer(noc, graph, cfg.backend, cfg.objective,
+                        recorder=recorder)
     resolver = None
     if cfg.device_discretize:
         from .discretize_batch import (continuous_to_grid_batch,
@@ -198,5 +204,7 @@ def run_ppo(graph, noc, cfg: PPOConfig = PPOConfig(), baseline_cost=None,
             "actor_loss": float(la),
             "critic_loss": float(lc),
         })
+        if recorder is not None:
+            recorder.event("ppo.iter", **history[-1])
     return PPOState(actor, critic, opt_a, opt_c, history, float(best_cost),
                     best_placement)

@@ -18,6 +18,18 @@ Examples::
         --contention-feedback
     PYTHONPATH=src python -m repro.deploy --topology hier:2x2:4x4,ibw=5e8 \\
         --partition chip --copartition-iters 2 --methods genetic
+
+``--trace out.jsonl`` / ``--chrome-trace out.json`` attach a
+:class:`repro.obs.Recorder` to the whole sweep: per-stage spans, search
+trajectory events, and scoring counters land in a JSONL event log and/or a
+``chrome://tracing`` / Perfetto-loadable trace file.
+
+``repro-deploy report`` deploys one model and prints the NoC flow report
+(per-link load summary, hotspot top-k, per-chip / inter-chip byte breakdown,
+ASCII heatmap — see :func:`repro.obs.flow_report`)::
+
+    PYTHONPATH=src python -m repro.deploy report --topology hier:2x2:4x4 \\
+        --method genetic --budget 2000 --trace deploy_trace.jsonl
 """
 from __future__ import annotations
 
@@ -27,6 +39,7 @@ import os
 
 from ..core.noc import NoC
 from ..core.topology import parse_topology
+from ..obs import Recorder, flow_report
 from ..snn import spike_resnet18, spike_resnet50, spike_vgg16
 from .engine import SCHEDULES, deploy_model
 from .objective import OBJECTIVES
@@ -59,7 +72,104 @@ def _csv(values) -> str:
     return ",".join(str(v) for v in values)
 
 
+def _add_topology_args(ap):
+    ap.add_argument("--cores", type=int, default=32,
+                    help=f"NoC size; known grids: {sorted(GRIDS)}")
+    ap.add_argument("--torus", action="store_true")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="explicit topology spec overriding --cores/--torus: "
+                         "mesh:RxC | torus:RxC | hier:CRxCC:KRxKC"
+                         "[,ibw=...,ien=...,ilat=...] "
+                         "(see repro.core.topology.parse_topology)")
+
+
+def _resolve_topology(ap, args, cores):
+    if args.topology is not None:
+        try:
+            return parse_topology(args.topology, link_bw=8e9,
+                                  core_flops=25.6e9, hop_latency=2e-8)
+        except ValueError as e:
+            ap.error(str(e))
+    if cores not in GRIDS:
+        ap.error(f"--cores must be one of {sorted(GRIDS)}")
+    rows, cols = GRIDS[cores]
+    return NoC(rows, cols, torus=args.torus, link_bw=8e9,
+               core_flops=25.6e9, hop_latency=2e-8)
+
+
+def _write_traces(recorder, trace, chrome_trace):
+    for path, writer in ((trace, recorder.write_jsonl),
+                         (chrome_trace, recorder.write_chrome_trace)):
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            writer(path)
+            print(f"# wrote {path}")
+
+
+def report_main(argv=None) -> int:
+    """``repro-deploy report``: deploy one model, print the NoC flow report."""
+    ap = argparse.ArgumentParser(
+        prog="repro-deploy report",
+        description="Deploy one model and print the NoC flow report: "
+                    "link-load summary, hotspot top-k, per-chip/inter-chip "
+                    "byte breakdown, per-core ASCII heatmap.")
+    ap.add_argument("--model", default="spike_resnet18",
+                    choices=tuple(MODELS))
+    ap.add_argument("--method", default="sigmate",
+                    help="optimize_placement method")
+    ap.add_argument("--objective", default="comm_cost",
+                    help=f"objective spec; names: {tuple(OBJECTIVES)}")
+    _add_topology_args(ap)
+    ap.add_argument("--partition", "--strategy", dest="strategy",
+                    default="auto",
+                    choices=("auto", "compute", "storage", "balanced",
+                             "chip", "chip_balanced"))
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="hotspot links to list")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the flow report dict (plus the plan report) "
+                         "to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the deployment's Recorder event log (JSONL)")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing / Perfetto trace JSON")
+    args = ap.parse_args(argv)
+
+    noc = _resolve_topology(ap, args, args.cores)
+    cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
+    recorder = Recorder() if (args.trace or args.chrome_trace) else None
+    plan = deploy_model(cfg, noc, partition_strategy=args.strategy,
+                        method=args.method, objective=args.objective,
+                        schedule="none", seed=args.seed, budget=args.budget,
+                        backend=args.backend, recorder=recorder)
+    rep = flow_report(noc, plan.graph, plan.placement, top_k=args.top_k)
+    d = noc.describe()
+    topo = f"{d.get('kind', 'grid')} {d.get('rows')}x{d.get('cols')}" \
+           f" ({d.get('n_cores')} cores)"
+    print(f"deployment: {args.model} via {args.method} "
+          f"(objective={args.objective}) on {topo}")
+    print(rep.render(top_k=args.top_k))
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"flow": rep.to_dict(), "plan": plan.report()}, f,
+                      indent=2)
+        print(f"# wrote {args.json}")
+    if recorder is not None:
+        _write_traces(recorder, args.trace, args.chrome_trace)
+    return 0
+
+
 def main(argv=None) -> int:
+    import sys
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "report":
+        return report_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="repro-deploy",
         description="End-to-end SNN deployment sweep: "
@@ -70,14 +180,7 @@ def main(argv=None) -> int:
                     help="comma list of optimize_placement methods")
     ap.add_argument("--objectives", default="comm_cost",
                     help=f"comma list from {tuple(OBJECTIVES)}")
-    ap.add_argument("--cores", type=int, default=32,
-                    help=f"NoC size; known grids: {sorted(GRIDS)}")
-    ap.add_argument("--torus", action="store_true")
-    ap.add_argument("--topology", default=None, metavar="SPEC",
-                    help="explicit topology spec overriding --cores/--torus: "
-                         "mesh:RxC | torus:RxC | hier:CRxCC:KRxKC"
-                         "[,ibw=...,ien=...,ilat=...] "
-                         "(see repro.core.topology.parse_topology)")
+    _add_topology_args(ap)
     ap.add_argument("--contention-feedback", action="store_true",
                     help="inflate per-stage schedule times with the placed "
                          "NoC contention (closes the placement->schedule "
@@ -104,6 +207,11 @@ def main(argv=None) -> int:
                     help="scoring backend override (batch|jax|pallas|reference)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write full DeploymentPlan reports to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the sweep's Recorder event log (JSONL): "
+                         "stage spans, search trajectories, scoring counters")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing / Perfetto trace JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI sweep (tiny model/budgets)")
     args = ap.parse_args(argv)
@@ -119,23 +227,15 @@ def main(argv=None) -> int:
         objectives = args.objectives.split(",")
         cores, budget, units = args.cores, args.budget, args.units
 
-    if args.topology is not None:
-        try:
-            noc = parse_topology(args.topology, link_bw=8e9,
-                                 core_flops=25.6e9, hop_latency=2e-8)
-        except ValueError as e:
-            ap.error(str(e))
-    else:
-        if cores not in GRIDS:
-            ap.error(f"--cores must be one of {sorted(GRIDS)}")
-        rows, cols = GRIDS[cores]
-        noc = NoC(rows, cols, torus=args.torus, link_bw=8e9,
-                  core_flops=25.6e9, hop_latency=2e-8)
+    noc = _resolve_topology(ap, args, cores)
 
     for model_name in models:            # fail on typos before any sweep runs
         if model_name not in MODELS:
             ap.error(f"unknown model {model_name!r}; choose from {tuple(MODELS)}")
 
+    # one recorder across the whole sweep: deployments show up as consecutive
+    # span groups, counters accumulate sweep-wide
+    recorder = Recorder() if (args.trace or args.chrome_trace) else None
     reports = []
     print(_csv(COLUMNS))
     for model_name in models:
@@ -147,7 +247,8 @@ def main(argv=None) -> int:
                     objective=objective, schedule=args.schedule, n_units=units,
                     seed=args.seed, budget=budget, backend=args.backend,
                     contention_feedback=args.contention_feedback,
-                    copartition_iters=args.copartition_iters)
+                    copartition_iters=args.copartition_iters,
+                    recorder=recorder)
                 reports.append(plan.report())
                 print(_csv(_row(plan)))
 
@@ -156,6 +257,8 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(reports, f, indent=2)
         print(f"# wrote {args.json}")
+    if recorder is not None:
+        _write_traces(recorder, args.trace, args.chrome_trace)
     return 0
 
 

@@ -21,13 +21,13 @@ future scenarios (multi-chip sweeps, evolutionary search, serving) compose.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
 from ..core import pipeline
 from ..core.partition import (CoreSpec, LayerProfile, Partition,
                               partition_model)
+from ..obs import NULL_RECORDER
 from ..snn.models import SNNConfig
 from ..snn.profile import profile_model
 from .objective import as_objective, partition_interchip_bytes
@@ -164,6 +164,7 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
                  backend: str | None = None, bwd_ratio: float = 2.0,
                  contention_feedback: bool = False,
                  copartition_iters: int = 0,
+                 recorder=None,
                  **method_kw) -> DeploymentPlan:
     """Run the full deployment flow of ``model`` onto ``noc``.
 
@@ -197,6 +198,12 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
     the placement's NoC evaluation, per-link-bandwidth aware) before the
     pipeline schedule is built. Stage times only grow, so the resulting
     makespan is never optimistically below the analytic path.
+
+    ``recorder`` is an optional :class:`repro.obs.Recorder`: every stage runs
+    inside a span (the ``stage_times_s`` durations are the span durations),
+    the placement search emits per-iteration trajectory events, and scoring
+    dispatch counts accumulate as counters. ``None`` (the default) keeps the
+    whole flow instrumentation-free — results are bit-identical either way.
     """
     # placement sits beside deploy in the layering (core.placement imports
     # deploy.objective at module scope) — resolve it at call time
@@ -208,71 +215,80 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
         raise ValueError(f"unknown schedule {schedule!r}; "
                          f"choose from {SCHEDULES}")
     strategy = resolve_partition_strategy(partition_strategy, noc)
-    t0 = time.perf_counter()
-    name, profiles = _profiles(model, batch, training, spike_density)
-    t1 = time.perf_counter()
-    part = partition_model(profiles, noc.n_cores, strategy, core,
-                           topology=noc)
-    graph = part.to_graph()
+    # a detached run still measures stage times through (unrecorded) spans
+    rec = recorder if recorder is not None else NULL_RECORDER
+    with rec.span("deploy.profile") as sp_profile:
+        name, profiles = _profiles(model, batch, training, spike_density)
+    with rec.span("deploy.partition", strategy=strategy) as sp_partition:
+        part = partition_model(profiles, noc.n_cores, strategy, core,
+                               topology=noc)
+        graph = part.to_graph()
     if schedule == "one_f_one_b":
         # 1F1B needs n_micro >= n_stages for a full pipe; report the count
         # actually scheduled, not the request
         n_units = max(n_units, part.n)
-    t2 = time.perf_counter()
-    result = optimize_placement(graph, noc, method=method, seed=seed,
-                                budget=budget, backend=backend,
-                                objective=objective, **method_kw)
-    t3 = time.perf_counter()
+    with rec.span("deploy.place", method=method) as sp_place:
+        result = optimize_placement(graph, noc, method=method, seed=seed,
+                                    budget=budget, backend=backend,
+                                    objective=objective, recorder=recorder,
+                                    **method_kw)
 
     rounds_run = 0
-    if copartition_iters > 0 and part.chip_of is not None \
-            and getattr(noc, "n_chips", 1) > 1:
+    with rec.span("deploy.copartition", iters=copartition_iters) as sp_copart:
+        if copartition_iters > 0 and part.chip_of is not None \
+                and getattr(noc, "n_chips", 1) > 1:
 
-        def _placed_interchip(g, placement):
-            return noc.interchip_bytes(
-                noc.evaluate(g, placement).link_traffic)
+            def _placed_interchip(g, placement):
+                return noc.interchip_bytes(
+                    noc.evaluate(g, placement).link_traffic)
 
-        best = (part, graph, result)
-        best_key = (result.objective_cost,
-                    _placed_interchip(graph, result.placement))
-        cur_part, cur_graph, cur_result = part, graph, result
-        for _ in range(copartition_iters):
-            cut_w = _measured_cut_weights(cur_part, cur_graph,
-                                          cur_result.placement, noc)
-            cand = partition_model(profiles, noc.n_cores, strategy, core,
-                                   topology=noc, cut_weights=cut_w)
-            if cand.n == cur_part.n and \
-                    np.array_equal(cand.chip_of, cur_part.chip_of):
-                break                     # allocation fixed point
-            cand_graph = cand.to_graph()
-            cand_result = optimize_placement(
-                cand_graph, noc, method=method, seed=seed, budget=budget,
-                backend=backend, objective=objective, **method_kw)
-            rounds_run += 1
-            cand_key = (cand_result.objective_cost,
-                        _placed_interchip(cand_graph, cand_result.placement))
-            cur_part, cur_graph, cur_result = cand, cand_graph, cand_result
-            if cand_key < best_key:
-                best_key, best = cand_key, (cand, cand_graph, cand_result)
-        part, graph, result = best
-    t3b = time.perf_counter()
-    t_copart = t3b - t3
+            best = (part, graph, result)
+            best_key = (result.objective_cost,
+                        _placed_interchip(graph, result.placement))
+            cur_part, cur_graph, cur_result = part, graph, result
+            for _ in range(copartition_iters):
+                cut_w = _measured_cut_weights(cur_part, cur_graph,
+                                              cur_result.placement, noc)
+                cand = partition_model(profiles, noc.n_cores, strategy, core,
+                                       topology=noc, cut_weights=cut_w)
+                if cand.n == cur_part.n and \
+                        np.array_equal(cand.chip_of, cur_part.chip_of):
+                    break                     # allocation fixed point
+                cand_graph = cand.to_graph()
+                cand_result = optimize_placement(
+                    cand_graph, noc, method=method, seed=seed, budget=budget,
+                    backend=backend, objective=objective, recorder=recorder,
+                    **method_kw)
+                rounds_run += 1
+                cand_key = (cand_result.objective_cost,
+                            _placed_interchip(cand_graph,
+                                              cand_result.placement))
+                cur_part, cur_graph, cur_result = \
+                    cand, cand_graph, cand_result
+                if cand_key < best_key:
+                    best_key, best = cand_key, (cand, cand_graph, cand_result)
+            part, graph, result = best
 
-    times = [s.latency(part.core) for s in part.slices]
-    if contention_feedback and schedule != "none":
-        # placed NoC contention: seconds each core spends serializing the
-        # traffic routed through it, added to the slice it hosts (contention
-        # is nonnegative, so makespan can only grow vs the analytic path)
-        comm_t = noc.core_comm_time(noc.evaluate(graph, result.placement))
-        flat = np.asarray(comm_t, dtype=float).reshape(-1)
-        times = [t + float(flat[int(p)])
-                 for t, p in zip(times, result.placement)]
-    sched = _schedule(times, schedule, n_units, bwd_ratio, training)
-    t4 = time.perf_counter()
-    stage_times = {"profile": t1 - t0, "partition": t2 - t1,
-                   "place": t3 - t2, "schedule": t4 - t3b}
+    with rec.span("deploy.schedule", schedule=schedule) as sp_schedule:
+        times = [s.latency(part.core) for s in part.slices]
+        if contention_feedback and schedule != "none":
+            # placed NoC contention: seconds each core spends serializing the
+            # traffic routed through it, added to the slice it hosts
+            # (contention is nonnegative, so makespan can only grow vs the
+            # analytic path)
+            comm_t = noc.core_comm_time(noc.evaluate(graph, result.placement))
+            flat = np.asarray(comm_t, dtype=float).reshape(-1)
+            times = [t + float(flat[int(p)])
+                     for t, p in zip(times, result.placement)]
+        sched = _schedule(times, schedule, n_units, bwd_ratio, training)
+    stage_times = {"profile": sp_profile.duration_s,
+                   "partition": sp_partition.duration_s,
+                   "place": sp_place.duration_s,
+                   "schedule": sp_schedule.duration_s}
     if rounds_run:
-        stage_times["copartition"] = t_copart
+        stage_times["copartition"] = sp_copart.duration_s
+    if recorder is not None:
+        recorder.count("deploy.deployments")
     return DeploymentPlan(
         model=name, noc=noc, profiles=profiles, partition=part, graph=graph,
         placement=result, schedule_name=schedule, schedule=sched,

@@ -75,7 +75,7 @@ def test_injected_regression_fails_suite():
          "partition_cut_bytes": 30.0},
         {"interchip_bytes": 60.0, "makespan_s": 1.0},
         {"interchip_bytes": 40.0, "makespan_s": 1.0},
-    ]}]}
+    ]}], "counters": {"noc_batch_evals": 1234}}
     good = json.loads(json.dumps(fresh))
     assert all(v["status"] == "ok"
                for v in compare_suite(metrics, fresh, good))
