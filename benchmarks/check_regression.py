@@ -164,17 +164,37 @@ SUITES = {
         Metric("grids.0.cases.3.interchip_bytes", rtol=DET),   # chip+copart
         Metric("counters.noc_batch_evals", rtol=DET),
     ],
+    "fault_replace": [
+        # the online re-placement loop is fully deterministic (seeded SA on
+        # the batch backend, analytic drift): gate the recovery outcomes,
+        # the acceptance window, and the loop's algorithmic work counters
+        Metric("acceptance.link_drop_triggered_replacement", expect=True),
+        Metric("acceptance.warm_within_10pct_of_cold", expect=True),
+        Metric("acceptance.warm_moves_at_most_25pct_of_cold_bytes",
+               expect=True),
+        Metric("recorder_identity.results_identical", expect=True),
+        Metric("scenarios.link_drop.final_objective", rtol=DET),
+        Metric("scenarios.link_drop.moved_state_bytes", rtol=DET),
+        Metric("scenarios.link_drop.recoveries.0.objective_after", rtol=DET),
+        Metric("scenarios.drift.final_objective", rtol=DET),
+        Metric("scenarios.node_drop.final_objective", rtol=DET),
+        Metric("scenarios.node_drop.n_replacements", rtol=DET),
+        Metric("counters.noc_batch_evals", rtol=DET),
+        Metric("counters.runtime_replacements", rtol=DET),
+    ],
 }
 
 
 def _run_suite(name: str, json_path: str) -> None:
     """Run one suite's smoke mode in-process, record written to json_path."""
-    from . import copartition, deploy_e2e, multichip, noc_eval, ppo_pipeline
+    from . import (copartition, deploy_e2e, fault_replace, multichip,
+                   noc_eval, ppo_pipeline)
     fn = {"noc_eval": noc_eval.noc_eval,
           "ppo_pipeline": ppo_pipeline.ppo_pipeline,
           "deploy_e2e": deploy_e2e.deploy_e2e,
           "multichip": multichip.multichip,
-          "copartition": copartition.copartition}[name]
+          "copartition": copartition.copartition,
+          "fault_replace": fault_replace.fault_replace}[name]
     for row in fn(smoke=True, json_path=json_path):
         print(f"  {row[0]},{row[1]:.1f},{row[2]}")
 

@@ -1,0 +1,187 @@
+"""Benchmark: online re-placement under faults and traffic drift.
+
+Feeds the :mod:`repro.deploy.runtime` control loop three scenarios on a
+multi-chip HierarchicalMesh and records every monitor sample and recovery
+decision:
+
+* ``link_drop`` — the headline: deploy, find the seeded placement's busiest
+  inter-chip link, drop it mid-scenario, and let the loop recover with a
+  migration-penalized warm re-place (``compare_cold=True`` runs the
+  from-scratch re-optimization next to it — the acceptance data);
+* ``drift``     — diurnal traffic drift only (no faults): the loop re-places
+  when the shifting pattern degrades the live placement past the threshold;
+* ``node_drop`` — a core dies and is later repaired: both events change chip
+  capacities, so the loop re-runs the whole partition->place flow on the
+  degraded fabric.
+
+Acceptance (ISSUE 7): on the full ``hier:2x2:4x4`` system, dropping the
+busiest inter-chip link triggers a re-placement whose objective lands within
+10% of the cold re-optimization while moving at most 25% of the state bytes
+the cold option would migrate. The emitted ``results/BENCH_fault_replace.json``
+carries the ``acceptance`` block; ``--smoke`` runs the seconds-scale version
+(2×2 chips of 2×2, S-ResNet18) whose committed baseline gates CI.
+
+The record also pins ``recorder_identity.results_identical``: replaying the
+headline scenario with the recorder attached and detached must produce
+bit-identical ScenarioResults (the control loop reads deterministic objective
+values and seeded RNG streams only).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from .common import SPIKE_MODELS, counter_record, write_record, write_trace
+from repro.core import HierarchicalMesh
+from repro.deploy import deploy_model
+from repro.deploy.runtime import run_scenario
+from repro.obs import Recorder
+
+# The tuned operating point of the warm re-placement (tests/test_runtime.py
+# asserts the acceptance window at the same settings). The initial deployment
+# gets 16x the warm budget so the live placement starts converged and the
+# recovery responds to the fault, not to leftover optimization slack; warm
+# repair anneals much cooler than a from-scratch SA (t0) so it perturbs the
+# live placement locally instead of scrambling it.
+THRESHOLD = 0.02
+MIGRATION_WEIGHT = 0.12
+WARM_T0 = 0.005
+DEPLOY_FACTOR = 16
+
+
+def _busiest_interchip_link(hm, cfg, budget: int) -> int:
+    """Link id of the hottest inter-chip link under the seeded deployment
+    (the same deploy run_scenario performs first, so the drop is guaranteed
+    to hit live traffic)."""
+    plan = deploy_model(cfg, hm, method="simulated_annealing", seed=0,
+                        budget=budget, schedule="none")
+    m = hm.evaluate(plan.graph, np.asarray(plan.placement.placement,
+                                           dtype=int))
+    loads = np.zeros(hm.n_links)
+    for label, vol in m.link_traffic.items():
+        loads[hm.link_id_of(label)] = vol
+    ic = hm.interchip_mask()
+    return int(np.argmax(np.where(ic, loads, -1.0)))
+
+
+def _scenario_row(name: str, res) -> tuple:
+    return (
+        f"fault_replace.{name}", 0.0,
+        f"replacements={res.n_replacements} cold={res.n_cold_fallbacks} "
+        f"moved_MB={res.moved_state_bytes / 1e6:.2f} "
+        f"max_deg={100 * res.max_degradation:+.1f}% "
+        f"final={res.final_objective:.3e}")
+
+
+def fault_replace(smoke: bool = False, json_path: str | None = None):
+    if smoke:
+        hm = HierarchicalMesh(2, 2, 2, 2, link_bw=8e9, core_flops=25.6e9,
+                              hop_latency=2e-8)
+        model, budget, dead_core = "S-ResNet18", 512, 5
+    else:
+        hm = HierarchicalMesh(2, 2, 4, 4, link_bw=8e9, core_flops=25.6e9,
+                              hop_latency=2e-8)
+        model, budget, dead_core = "S-VGG16", 4096, 21
+    cfg = SPIKE_MODELS[model]()
+    deploy_budget = budget * DEPLOY_FACTOR
+    lid = _busiest_interchip_link(hm, cfg, deploy_budget)
+
+    recorder = Recorder()
+    common = dict(method="simulated_annealing", objective="comm_cost",
+                  budget=budget, deploy_budget=deploy_budget,
+                  migration_weight=MIGRATION_WEIGHT,
+                  warm_kw={"t0": WARM_T0}, seed=0)
+
+    link_scen = f"steps=6;fault=link:{lid}@2"
+    link_res = run_scenario(cfg, hm, link_scen, threshold=THRESHOLD,
+                            compare_cold=True, cold_budget=deploy_budget,
+                            recorder=recorder, **common)
+    drift_res = run_scenario(cfg, hm, "steps=8;drift=diurnal:0.4:8",
+                             threshold=0.15, recorder=recorder, **common)
+    node_scen = f"steps=5;fault=node:{dead_core}@1;repair=node:{dead_core}@3"
+    node_res = run_scenario(cfg, hm, node_scen, threshold=0.15,
+                            recorder=recorder, **common)
+
+    # recorder on/off must leave the scenario bit-identical (compare the
+    # serialized results of a detached and an attached replay)
+    res_off = run_scenario(cfg, hm, link_scen, threshold=THRESHOLD, **common)
+    res_on = run_scenario(cfg, hm, link_scen, threshold=THRESHOLD,
+                          recorder=Recorder(), **common)
+    identical = res_off.to_dict() == res_on.to_dict()
+
+    rec = link_res.recoveries[0] if link_res.recoveries else None
+    cold = (rec or {}).get("cold_reference")
+    acceptance = {
+        "link_drop_triggered_replacement": link_res.n_replacements >= 1,
+        "warm_within_10pct_of_cold":
+            bool(rec and cold
+                 and rec["objective_after"] <= 1.10 * cold["objective"]),
+        "warm_moves_at_most_25pct_of_cold_bytes":
+            bool(rec and cold and rec["moved_state_bytes"]
+                 <= 0.25 * cold["moved_state_bytes"]),
+        "warm_over_cold_objective":
+            rec["objective_after"] / cold["objective"] if rec and cold
+            else None,
+        "warm_moved_fraction_of_cold":
+            rec["moved_state_bytes"] / cold["moved_state_bytes"]
+            if rec and cold and cold["moved_state_bytes"] else None,
+    }
+
+    record = {
+        "smoke": smoke,
+        "topology": hm.describe(),
+        "model": model,
+        "budget": budget,
+        "deploy_budget": deploy_budget,
+        "threshold": THRESHOLD,
+        "migration_weight": MIGRATION_WEIGHT,
+        "warm_t0": WARM_T0,
+        "busiest_interchip_link": lid,
+        "scenarios": {
+            "link_drop": link_res.to_dict(),
+            "drift": drift_res.to_dict(),
+            "node_drop": node_res.to_dict(),
+        },
+        "acceptance": acceptance,
+        "recorder_identity": {"results_identical": identical},
+        "counters": counter_record(recorder),
+    }
+
+    rows = [("fault_replace.busiest_link", 0.0,
+             f"link={lid} (interchip) scenario={link_scen!r}")]
+    for name, res in (("link_drop", link_res), ("drift", drift_res),
+                      ("node_drop", node_res)):
+        rows.append(_scenario_row(name, res))
+    if rec and cold:
+        rows.append((
+            "fault_replace.acceptance", 0.0,
+            f"warm/cold={acceptance['warm_over_cold_objective']:.3f} "
+            f"moved_frac={acceptance['warm_moved_fraction_of_cold']:.3f} "
+            f"within10={acceptance['warm_within_10pct_of_cold']} "
+            f"moved<=25={acceptance['warm_moves_at_most_25pct_of_cold_bytes']}"
+        ))
+    rows.append(("fault_replace.recorder_identity", 0.0,
+                 f"identical={identical}"))
+    out = write_record(record, json_path, smoke, "BENCH_fault_replace.json")
+    if out:
+        rows.append(("fault_replace.json", 0.0,
+                     f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "fault_replace", json_path, smoke)
+    if tr:
+        rows.append(("fault_replace.trace", 0.0,
+                     f"wrote {os.path.relpath(tr)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI subset (tiny chips/budgets)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
+    args = ap.parse_args()
+    for name, us, derived in fault_replace(smoke=args.smoke,
+                                           json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

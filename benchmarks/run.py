@@ -17,8 +17,9 @@ def main() -> None:
                          "error, rows) to PATH")
     args = ap.parse_args()
 
-    from . import (copartition, deploy_e2e, multichip, noc_eval, paper_figs,
-                   ppo_pipeline, roofline, spike_kernel, tpu_placement)
+    from . import (copartition, deploy_e2e, fault_replace, multichip,
+                   noc_eval, paper_figs, ppo_pipeline, roofline, spike_kernel,
+                   tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -31,6 +32,7 @@ def main() -> None:
         ("deploy_e2e", deploy_e2e.deploy_e2e),
         ("multichip", multichip.multichip),
         ("copartition", copartition.copartition),
+        ("fault_replace", fault_replace.fault_replace),
         ("fig6", paper_figs.fig6_placement_32),
         ("fig7_11", paper_figs.hotspots),
         ("fig10", paper_figs.fig10_vs_policy),
@@ -39,8 +41,11 @@ def main() -> None:
     ]
     # noc_eval / ppo_pipeline time the slow seed paths (reference loop, Python
     # spiral); deploy_e2e / multichip sweep full placement searches per model
-    # x objective (multichip includes a PPO run on 64 cores)
-    fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip"}
+    # x objective (multichip includes a PPO run on 64 cores); fault_replace
+    # replays minute-scale scenario sweeps on the 64-core fabric (the nightly
+    # job runs it as its own step, so --fast skipping it avoids a double run)
+    fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip",
+                 "fault_replace"}
     print("name,us_per_call,derived")
     suites = []          # per-suite run records (the --json artifact)
     failed = []

@@ -1,7 +1,8 @@
 """The paper's contribution: balanced partitioning + RL core placement + pipelining."""
 from .graph import LogicalGraph, chain_graph, random_dag  # noqa: F401
-from .topology import (GridTopology, HierarchicalMesh, Topology,  # noqa: F401
-                       parse_topology)
+from .topology import (DegradedTopology, GridTopology,  # noqa: F401
+                       HierarchicalMesh, InfeasibleTopologyError, Topology,
+                       degrade, parse_topology)
 from .noc import NoC, NoCMetrics  # noqa: F401
 from .noc_batch import (BatchedNoC, BatchMetrics, batched_noc,  # noqa: F401
                         comm_cost_batch, directional_cdv_batch, evaluate_batch)

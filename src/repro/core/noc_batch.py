@@ -220,8 +220,11 @@ class BatchedNoC:
                 np.asarray(graph.compute, np.float64))
 
     def _placements(self, placements, n_nodes: int, validate: bool):
-        return _check_placements(placements, n_nodes,
-                                 self.tables.n_cores if validate else None)
+        if validate:
+            # full Topology.evaluate semantics, the dropped-core rejection
+            # of degraded topologies included
+            return validate_placements(self.noc, placements, n_nodes)
+        return _check_placements(placements, n_nodes, None)
 
     def _resolve(self, backend: str) -> str:
         if backend == "auto":
@@ -645,10 +648,19 @@ def directional_cdv_batch(noc: Topology, graph: LogicalGraph, placements,
 
 def validate_placements(noc: Topology, placements, n_nodes: int) -> np.ndarray:
     """Check a [B, n] (or [n]) placement array the way ``Topology.evaluate``
-    does (injective, in range); returns the 2-D int64 array. For validating
-    user input once before handing it to an unvalidated scorer. Needs only
-    ``noc.n_cores`` — does not build (or cache) routing tables."""
-    return _check_placements(placements, n_nodes, noc.n_cores)
+    does (injective, in range, and off dropped cores on degraded
+    topologies); returns the 2-D int64 array. For validating user input once
+    before handing it to an unvalidated scorer. Does not build (or cache)
+    routing tables."""
+    P = _check_placements(placements, n_nodes, noc.n_cores)
+    dropped = getattr(noc, "dropped_nodes", frozenset)()
+    if dropped and P.size:
+        # reuse the topology's own rejection (clear InfeasibleTopologyError)
+        bad = np.isin(P, np.fromiter(dropped, dtype=np.int64,
+                                     count=len(dropped)))
+        if bad.any():
+            noc._check_placement(P[np.nonzero(bad.any(axis=1))[0][0]])
+    return P
 
 
 # Backends accepted by optimizers: "batch" (vectorized numpy float64 — exact

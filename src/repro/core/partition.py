@@ -393,8 +393,9 @@ def partition_model(layers, n_cores: int, strategy: str = "balanced",
         if topology is None:
             raise ValueError(f"strategy {strategy!r} needs topology= "
                              "(the chip structure drives the allocation)")
-        if topology.n_cores != n_cores:
-            raise ValueError(f"topology has {topology.n_cores} cores, "
+        usable = getattr(topology, "n_alive_cores", topology.n_cores)
+        if usable != n_cores:
+            raise ValueError(f"topology has {usable} usable cores, "
                              f"asked to partition onto {n_cores}")
         return _partition_chip_aware(layers, strategy, core, topology,
                                      cut_weights, chip_slack)
@@ -418,7 +419,7 @@ def partition_model(layers, n_cores: int, strategy: str = "balanced",
 def _partition_chip_aware(layers, strategy: str, core: CoreSpec, topology,
                           cut_weights, chip_slack: float) -> Partition:
     """Two-level chip-aware partitioning (see :func:`partition_model`)."""
-    n_cores = topology.n_cores
+    n_cores = getattr(topology, "n_alive_cores", topology.n_cores)
     if topology.n_chips <= 1:
         # single chip: exactly the balanced flow, tagged chip 0
         flat = partition_model(layers, n_cores, "balanced", core)

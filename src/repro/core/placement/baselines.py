@@ -20,22 +20,44 @@ import numpy as np
 from ..noc_batch import make_scorer, validate_placements
 
 
+def core_pool(noc):
+    """The pool random placements draw from: the plain core *count* on intact
+    topologies — so ``rng.permutation(int)`` keeps the historical sampling
+    stream bit-for-bit — or the surviving-core array on degraded ones
+    (:class:`repro.core.topology.DegradedTopology`)."""
+    n_alive = getattr(noc, "n_alive_cores", noc.n_cores)
+    if n_alive == noc.n_cores:
+        return noc.n_cores
+    return np.asarray(noc.alive_cores(), dtype=np.int64)
+
+
+def _n_alive(noc) -> int:
+    return getattr(noc, "n_alive_cores", noc.n_cores)
+
+
 def zigzag(n_nodes: int, noc) -> np.ndarray:
-    """Row-major sequential deployment from the top-left corner."""
-    if n_nodes > noc.n_cores:
+    """Row-major sequential deployment from the top-left corner (skipping
+    dropped cores on degraded fabrics)."""
+    if n_nodes > _n_alive(noc):
         raise ValueError("graph larger than NoC")
+    if _n_alive(noc) != noc.n_cores:
+        return np.asarray(noc.alive_cores()[:n_nodes], dtype=int)
     return np.arange(n_nodes)
 
 
 def sigmate(n_nodes: int, noc) -> np.ndarray:
     """Serpentine deployment: each row filled in alternating direction, so
-    consecutive logical nodes stay physically adjacent across row boundaries."""
-    if n_nodes > noc.n_cores:
+    consecutive logical nodes stay physically adjacent across row boundaries
+    (dropped cores are skipped on degraded fabrics)."""
+    if n_nodes > _n_alive(noc):
         raise ValueError("graph larger than NoC")
     order = []
     for r in range(noc.rows):
         cols = range(noc.cols) if r % 2 == 0 else range(noc.cols - 1, -1, -1)
         order.extend(noc.index(r, c) for c in cols)
+    if _n_alive(noc) != noc.n_cores:
+        dropped = noc.dropped_nodes()
+        order = [c for c in order if c not in dropped]
     return np.asarray(order[:n_nodes])
 
 
@@ -53,11 +75,10 @@ def chip_init(graph, noc) -> np.ndarray:
     if graph.chip_of is None:
         raise ValueError("graph has no chip assignment; partition with a "
                          "chip-aware strategy first (strategy='chip')")
-    chip_core = noc.chip_of_array()
     placement = np.full(graph.n, -1, dtype=int)
     for chip in np.unique(graph.chip_of):
         nodes = np.nonzero(graph.chip_of == chip)[0]
-        cores = np.nonzero(chip_core == chip)[0]
+        cores = np.asarray(noc.cores_of_chip(int(chip)), dtype=int)
         if nodes.size > cores.size:
             raise ValueError(f"chip {int(chip)} assigned {nodes.size} slices "
                              f"but has only {cores.size} cores")
@@ -99,8 +120,9 @@ def random_search(graph, noc, iters: int = 2000, seed: int = 0,
         init = np.asarray(init, dtype=int)
         validate_placements(noc, init, graph.n)
         best, best_cost = init, float(score(init[None, :])[0])
+    pool = core_pool(noc)
     for it in range(iters):
-        p = rng.permutation(noc.n_cores)[:graph.n]
+        p = rng.permutation(pool)[:graph.n]
         c = float(score(p[None, :])[0])
         if c < best_cost:
             best, best_cost = p, c
@@ -127,8 +149,10 @@ def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
     score = make_scorer(noc, graph, backend, objective, recorder=recorder)
     cur = np.array(init if init is not None else zigzag(graph.n, noc))
     validate_placements(noc, cur, graph.n)   # reject bad user-supplied init
-    # extend with free cores so swaps can move nodes to empty cells
-    free = [i for i in range(noc.n_cores) if i not in set(cur.tolist())]
+    # extend with free (surviving) cores so swaps can move nodes to empty cells
+    pool = core_pool(noc)
+    cands = range(pool) if isinstance(pool, int) else pool.tolist()
+    free = [i for i in cands if i not in set(cur.tolist())]
     slots = np.concatenate([cur, np.asarray(free, dtype=int)])
     n = graph.n
     cost = float(score(slots[None, :n])[0])
@@ -168,7 +192,7 @@ def greedy(graph, noc) -> np.ndarray:
     the free core minimizing the incremental hop-weighted cost to already-placed
     neighbours."""
     placement = np.full(graph.n, -1, dtype=int)
-    taken = set()
+    taken = {int(c) for c in noc.dropped_nodes()}   # never place on dead cores
     adj = graph.adj
     for node in range(graph.n):
         best_core, best_inc = None, np.inf

@@ -108,6 +108,13 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     history = None
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
+    if method in ("ppo", "policy") and \
+            getattr(noc, "n_alive_cores", noc.n_cores) != noc.n_cores:
+        raise ValueError(
+            f"method {method!r} does not support degraded topologies — its "
+            "device discretizer can land on dropped cores; use "
+            "simulated_annealing / genetic / random_search (the methods the "
+            "online re-placement loop warm-starts) on faulty fabrics")
     init_methods = ("random_search", "simulated_annealing", "genetic",
                     "population_random_search",
                     "population_simulated_annealing")
@@ -185,14 +192,15 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
             # RL methods have no init hook; seed them by including the
             # chip-respecting constructor in the best-of candidate set
             m_seed = noc.evaluate(graph, chip_seed)
-            if obj.from_metrics(m_seed, noc) < obj.from_metrics(m, noc):
+            if obj.from_metrics(m_seed, noc, chip_seed) < \
+                    obj.from_metrics(m, noc, placement):
                 placement, m = chip_seed, m_seed
     return PlacementResult(
         method=method, placement=np.asarray(placement),
         comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,
         throughput=m.throughput, max_link=m.max_link,
         wall_time_s=sp.duration_s, history=history,
-        objective=obj.name, objective_cost=obj.from_metrics(m, noc))
+        objective=obj.name, objective_cost=obj.from_metrics(m, noc, placement))
 
 
 def _override_cfg(cfg, backend, objective):

@@ -25,7 +25,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..noc_batch import make_scorer, validate_placements
-from .baselines import sigmate, zigzag
+from .baselines import core_pool, sigmate, zigzag
 
 
 def random_search_population(graph, noc, iters: int = 2000,
@@ -52,9 +52,10 @@ def random_search_population(graph, noc, iters: int = 2000,
         best, best_cost = init, float(score(init[None, :])[0])
     done = 0
     batch_idx = 0
+    pool = core_pool(noc)
     while done < iters:
         k = min(pop_size, iters - done)
-        perms = np.stack([rng.permutation(noc.n_cores)[:graph.n]
+        perms = np.stack([rng.permutation(pool)[:graph.n]
                           for _ in range(k)])
         costs = score(perms)
         i = int(np.argmin(costs))
@@ -88,16 +89,19 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
     if pop_size < 1:
         raise ValueError(f"pop_size must be >= 1, got {pop_size}")
     rng = np.random.default_rng(seed)
-    n, n_cores = graph.n, noc.n_cores
+    pool = core_pool(noc)       # int when intact; alive-core array otherwise
+    pool_arr = (np.arange(pool) if isinstance(pool, int)
+                else np.asarray(pool))
+    n, n_slots = graph.n, pool_arr.size
     score = make_scorer(noc, graph, backend, objective, recorder=recorder)
 
     base = np.asarray(init if init is not None else zigzag(n, noc), dtype=int)
     validate_placements(noc, base, n)        # reject bad user-supplied init
-    free = np.setdiff1d(np.arange(n_cores), base)
-    slots = np.empty((pop_size, n_cores), dtype=int)
+    free = np.setdiff1d(pool_arr, base)
+    slots = np.empty((pop_size, n_slots), dtype=int)
     slots[0] = np.concatenate([base, free])
     for p in range(1, pop_size):
-        slots[p] = rng.permutation(n_cores)
+        slots[p] = rng.permutation(pool)
 
     cost = score(slots[:, :n])
     i0 = int(np.argmin(cost))
@@ -106,8 +110,8 @@ def simulated_annealing_population(graph, noc, iters: int = 1000,
     cooling = t_end_frac ** (1.0 / max(iters, 1))
     rows = np.arange(pop_size)
     for it in range(iters):
-        i = rng.integers(0, n_cores, pop_size)
-        j = rng.integers(0, n_cores, pop_size)
+        i = rng.integers(0, n_slots, pop_size)
+        j = rng.integers(0, n_slots, pop_size)
         valid = ~((i == j) | ((i >= n) & (j >= n)))
         swapped = slots.copy()
         swapped[rows, i], swapped[rows, j] = slots[rows, j], slots[rows, i]
@@ -181,15 +185,18 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
     if tournament < 1:
         raise ValueError(f"tournament must be >= 1, got {tournament}")
     rng = np.random.default_rng(seed)
-    n, n_cores = graph.n, noc.n_cores
+    pool = core_pool(noc)       # int when intact; alive-core array otherwise
+    pool_arr = (np.arange(pool) if isinstance(pool, int)
+                else np.asarray(pool))
+    n, n_slots = graph.n, pool_arr.size
     score = make_scorer(noc, graph, backend, objective, recorder=recorder)
 
     def full_perm(placement) -> np.ndarray:
         placement = np.asarray(placement, dtype=int)
-        free = np.setdiff1d(np.arange(n_cores), placement)
+        free = np.setdiff1d(pool_arr, placement)
         return np.concatenate([placement, free])
 
-    slots = np.empty((pop_size, n_cores), dtype=int)
+    slots = np.empty((pop_size, n_slots), dtype=int)
     if init is not None:
         validate_placements(noc, np.asarray(init, dtype=int), n)
         slots[0] = full_perm(init)
@@ -197,7 +204,7 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
         slots[0] = full_perm(zigzag(n, noc))
     slots[1] = full_perm(sigmate(n, noc))
     for p in range(2, pop_size):
-        slots[p] = rng.permutation(n_cores)
+        slots[p] = rng.permutation(pool)
 
     n_elite = max(1, int(round(elite_frac * pop_size)))
     cost = score(slots[:, :n])
@@ -226,7 +233,7 @@ def genetic_population(graph, noc, generations: int = 80, pop_size: int = 64,
             else:
                 child = slots[a].copy()
             while rng.random() < mutation_rate:
-                i, j = rng.integers(0, n_cores, 2)
+                i, j = rng.integers(0, n_slots, 2)
                 child[i], child[j] = child[j], child[i]
             nxt[n_elite + k] = child
         slots = nxt

@@ -31,9 +31,20 @@ directional_cdv`); generic topologies may use any dense id scheme as long as
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
+
+
+class InfeasibleTopologyError(ValueError):
+    """The surviving fabric cannot host the requested workload.
+
+    Raised when fault injection disconnects a pair of alive cores (no detour
+    exists), or when a placement assigns a logical unit to a dropped core.
+    Subclasses :class:`ValueError` so existing placement-validation handlers
+    keep working unchanged.
+    """
 
 
 @dataclasses.dataclass
@@ -171,6 +182,30 @@ class Topology:
         """True iff every link shares the scalar bandwidth/latency — the
         bit-exact historical evaluation path applies."""
         return self.link_bandwidth() is None and self.link_latency() is None
+
+    # ---- fault injection (intact topologies carry no faults) --------------
+    @property
+    def n_alive_cores(self) -> int:
+        """Cores that can host logical units (== ``n_cores`` when intact)."""
+        return self.n_cores
+
+    def alive_cores(self) -> np.ndarray:
+        """Surviving core ids in ascending order."""
+        return np.arange(self.n_cores, dtype=np.int64)
+
+    def dropped_links(self) -> frozenset:
+        return frozenset()
+
+    def dropped_nodes(self) -> frozenset:
+        return frozenset()
+
+    def drop_link(self, lid: int) -> "DegradedTopology":
+        """Degraded view with directed link ``lid`` failed (detour-routed)."""
+        return DegradedTopology(self, dropped_links=(int(lid),))
+
+    def drop_node(self, core: int) -> "DegradedTopology":
+        """Degraded view with ``core`` failed (its links fail with it)."""
+        return DegradedTopology(self, dropped_nodes=(int(core),))
 
     def cache_key(self) -> tuple:
         """Structural identity for the :func:`repro.core.noc_batch.batched_noc`
@@ -620,6 +655,258 @@ class HierarchicalMesh(GridTopology):
                 "e_byte_hop": self.e_byte_hop,
                 "interchip_energy": self.interchip_energy,
                 "interchip_latency": self.interchip_latency}
+
+
+# ---------------------------------------------------------------------------
+# fault injection: degraded views with detour routing
+# ---------------------------------------------------------------------------
+
+
+def degrade(topo: Topology, links=(), nodes=()) -> Topology:
+    """``topo`` with the given faults applied, or the intact base itself when
+    both fault sets are empty — so a no-fault scenario reuses the base
+    object's ``cache_key`` (and therefore its cached scorer tables) and stays
+    bit-identical to an offline run."""
+    base = topo.base if isinstance(topo, DegradedTopology) else topo
+    links, nodes = tuple(links), tuple(nodes)
+    if not links and not nodes:
+        return base
+    return DegradedTopology(base, dropped_links=links, dropped_nodes=nodes)
+
+
+class DegradedTopology(Topology):
+    """A base topology with failed links and/or cores.
+
+    Composition, not mutation: the base object is untouched, and the degraded
+    view keeps the *same* core/link id space (``n_cores``/``n_links``
+    unchanged, dropped entries simply carry no traffic), so
+    :func:`repro.core.noc_batch.build_tables` and every scorer backend work
+    on it unchanged. Its ``cache_key`` extends the base key with the sorted
+    fault sets, keeping intact and degraded table caches separate.
+
+    Routing is deterministic "XY with fallback": a pair whose base route
+    survives keeps it verbatim (repairing every fault restores bit-identical
+    routes and metrics), otherwise the detour is a greedy walk that at each
+    hop takes the lowest-id usable out-link that reduces the BFS distance to
+    the destination over the surviving directed graph — horizontal slots sort
+    before vertical in the ``core*4 + {L,R,U,D}`` grid id scheme, preserving
+    the XY flavour around the hole. Construction raises
+    :class:`InfeasibleTopologyError` if any pair of alive cores is
+    disconnected. Pairs involving dropped cores route as empty (hops 0) so
+    batched table construction over all pairs still works; placements using
+    them are rejected by :meth:`_check_placement`.
+    """
+
+    def __init__(self, base: Topology, dropped_links=(), dropped_nodes=()):
+        if isinstance(base, DegradedTopology):
+            dropped_links = tuple(dropped_links) + tuple(base.dropped_links())
+            dropped_nodes = tuple(dropped_nodes) + tuple(base.dropped_nodes())
+            base = base.base
+        self.base = base
+        n, n_links = base.n_cores, base.n_links
+        dl = frozenset(int(x) for x in dropped_links)
+        dn = frozenset(int(x) for x in dropped_nodes)
+        if dl and (min(dl) < 0 or max(dl) >= n_links):
+            raise ValueError(f"dropped link id out of range [0, {n_links})")
+        if dn and (min(dn) < 0 or max(dn) >= n):
+            raise ValueError(f"dropped core id out of range [0, {n})")
+        self._dropped_links_set, self._dropped_nodes_set = dl, dn
+        self._dropped_nodes_arr = np.fromiter(sorted(dn), dtype=np.int64,
+                                              count=len(dn))
+        self.link_bw = base.link_bw
+        self.core_flops = base.core_flops
+        self.hop_latency = base.hop_latency
+
+        src = np.asarray(base.link_src_array(), dtype=np.int64)
+        dst = np.asarray(base.link_dst_array(), dtype=np.int64)
+        # A link id is *physical* iff it is exactly the base one-hop route of
+        # its endpoints — this excludes mesh wrap ids (never routed) and
+        # duplicate ids on degenerate 2-wide tori from detour routing.
+        usable = np.fromiter(
+            (base.route_ids(int(src[lid]), int(dst[lid])) == [lid]
+             for lid in range(n_links)), dtype=bool, count=n_links)
+        if dl:
+            usable[sorted(dl)] = False
+        alive_mask = np.ones(n, dtype=bool)
+        if dn:
+            alive_mask[sorted(dn)] = False
+        usable &= alive_mask[src] & alive_mask[dst]
+        self._usable = usable
+        self._alive = np.nonzero(alive_mask)[0].astype(np.int64)
+        self._link_dst = dst
+
+        # Per-core usable out-links in ascending id order (the greedy detour
+        # preference) + all-pairs BFS distances on the surviving graph.
+        self._out = [np.nonzero(usable & (src == c))[0] for c in range(n)]
+        rev = [[] for _ in range(n)]
+        for lid in np.nonzero(usable)[0]:
+            rev[int(dst[lid])].append(int(src[lid]))
+        dist = np.full((n, n), -1, dtype=np.int32)
+        for d in self._alive:
+            d = int(d)
+            dist[d, d] = 0
+            dq = collections.deque([d])
+            while dq:
+                c = dq.popleft()
+                for p in rev[c]:
+                    if dist[p, d] < 0:
+                        dist[p, d] = dist[c, d] + 1
+                        dq.append(p)
+        bad = [(int(s), int(d)) for s in self._alive for d in self._alive
+               if dist[s, d] < 0]
+        if bad:
+            raise InfeasibleTopologyError(
+                f"degraded {type(base).__name__} disconnects "
+                f"{len(bad)} alive core pair(s), e.g. {bad[0]} "
+                f"(dropped links {sorted(dl)}, dropped cores {sorted(dn)})")
+        self._dist = dist
+        self._hops = np.where(dist < 0, 0, dist).astype(np.int32)
+        self._route_cache: dict = {}
+
+    # ---- delegation to the intact base ------------------------------------
+    def __getattr__(self, name):
+        if name == "base" or name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.base, name)
+
+    @property
+    def n_cores(self) -> int:
+        return self.base.n_cores
+
+    @property
+    def n_links(self) -> int:
+        return self.base.n_links
+
+    @property
+    def grid_shape(self) -> tuple:
+        return self.base.grid_shape
+
+    def link_dst_array(self) -> np.ndarray:
+        return self.base.link_dst_array()
+
+    def link_src_array(self) -> np.ndarray:
+        return self.base.link_src_array()
+
+    def link_label(self, lid: int):
+        return self.base.link_label(lid)
+
+    def link_id_of(self, label) -> int:
+        return self.base.link_id_of(label)
+
+    def link_bandwidth(self):
+        return self.base.link_bandwidth()
+
+    def link_latency(self):
+        return self.base.link_latency()
+
+    def link_energy_per_byte(self):
+        return self.base.link_energy_per_byte()
+
+    def interchip_mask(self):
+        return self.base.interchip_mask()
+
+    @property
+    def n_chips(self) -> int:
+        return self.base.n_chips
+
+    def chip_of_array(self) -> np.ndarray:
+        return self.base.chip_of_array()
+
+    def chip_order(self) -> np.ndarray:
+        return self.base.chip_order()
+
+    # ---- fault state -------------------------------------------------------
+    @property
+    def n_alive_cores(self) -> int:
+        return int(self._alive.size)
+
+    def alive_cores(self) -> np.ndarray:
+        return self._alive
+
+    def dropped_links(self) -> frozenset:
+        return self._dropped_links_set
+
+    def dropped_nodes(self) -> frozenset:
+        return self._dropped_nodes_set
+
+    def repair_link(self, lid: int) -> Topology:
+        """View with link ``lid`` restored (the base when no faults remain)."""
+        return degrade(self.base, links=self._dropped_links_set - {int(lid)},
+                       nodes=self._dropped_nodes_set)
+
+    def repair_node(self, core: int) -> Topology:
+        """View with ``core`` restored (the base when no faults remain)."""
+        return degrade(self.base, links=self._dropped_links_set,
+                       nodes=self._dropped_nodes_set - {int(core)})
+
+    def cores_of_chip(self, chip: int) -> np.ndarray:
+        cores = self.base.cores_of_chip(chip)
+        if not self._dropped_nodes_set:
+            return cores
+        return cores[~np.isin(cores, self._dropped_nodes_arr)]
+
+    def chip_capacities(self) -> np.ndarray:
+        return np.bincount(self.chip_of_array()[self._alive],
+                           minlength=self.n_chips)
+
+    # ---- degraded routing --------------------------------------------------
+    def route_ids(self, src: int, dst: int) -> list:
+        src, dst = int(src), int(dst)
+        if src == dst or src in self._dropped_nodes_set \
+                or dst in self._dropped_nodes_set:
+            return []
+        cached = self._route_cache.get((src, dst))
+        if cached is not None:
+            return list(cached)
+        ids = self.base.route_ids(src, dst)
+        if not all(self._usable[lid] for lid in ids):
+            ids, cur, dcol = [], src, self._dist[:, dst]
+            while cur != dst:
+                for lid in self._out[cur]:
+                    nxt = int(self._link_dst[lid])
+                    if dcol[nxt] == dcol[cur] - 1:
+                        ids.append(int(lid))
+                        cur = nxt
+                        break
+                else:       # unreachable: connectivity was checked upfront
+                    raise InfeasibleTopologyError(
+                        f"no surviving route {src}->{dst}")
+        self._route_cache[(src, dst)] = tuple(ids)
+        return ids
+
+    def hops(self, src: int, dst: int) -> int:
+        return int(self._hops[int(src), int(dst)])
+
+    def hops_matrix(self) -> np.ndarray:
+        return self._hops.copy()
+
+    # ---- identity / validation --------------------------------------------
+    def cache_key(self) -> tuple:
+        return self.base.cache_key() + (
+            "degraded", tuple(sorted(self._dropped_links_set)),
+            tuple(sorted(self._dropped_nodes_set)))
+
+    def describe(self) -> dict:
+        out = dict(self.base.describe())
+        out["degraded"] = {
+            "dropped_links": sorted(self._dropped_links_set),
+            "dropped_nodes": sorted(self._dropped_nodes_set),
+            "n_alive_cores": self.n_alive_cores,
+        }
+        return out
+
+    def _check_placement(self, placement: np.ndarray) -> np.ndarray:
+        placement = Topology._check_placement(self, placement)
+        if self._dropped_nodes_set:
+            on_dropped = np.isin(placement, self._dropped_nodes_arr)
+            if on_dropped.any():
+                units = np.nonzero(on_dropped)[0].tolist()
+                cores = sorted(set(int(c) for c in placement[on_dropped]))
+                raise InfeasibleTopologyError(
+                    f"placement assigns logical unit(s) {units} to dropped "
+                    f"core(s) {cores}; re-place onto the "
+                    f"{self.n_alive_cores} surviving cores")
+        return placement
 
 
 # ---------------------------------------------------------------------------

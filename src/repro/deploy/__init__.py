@@ -7,7 +7,9 @@ multi-objective cost model every placement optimizer scores against
 ``"latency"``, or weighted combinations). ``python -m repro.deploy`` sweeps
 models × methods × objectives from the command line.
 """
-from .objective import (EnergyModel, Objective, OBJECTIVES,  # noqa: F401
-                        as_objective, objective_scorer,
-                        partition_interchip_bytes)
+from .objective import (EnergyModel, MigrationSpec, Objective,  # noqa: F401
+                        OBJECTIVES, as_objective, objective_scorer,
+                        partition_interchip_bytes, with_migration)
 from .engine import DeploymentPlan, SCHEDULES, deploy_model  # noqa: F401
+from .runtime import (Scenario, ScenarioEvent, ScenarioResult,  # noqa: F401
+                      parse_scenario, run_scenario)

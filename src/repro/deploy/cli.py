@@ -30,6 +30,17 @@ ASCII heatmap — see :func:`repro.obs.flow_report`)::
 
     PYTHONPATH=src python -m repro.deploy report --topology hier:2x2:4x4 \\
         --method genetic --budget 2000 --trace deploy_trace.jsonl
+
+``--faults "link:3,node:7"`` runs any of the commands on a degraded fabric
+(dropped links/cores with detour re-routing — see
+:class:`repro.core.topology.DegradedTopology`). ``repro-deploy replay`` feeds
+a fault/traffic-drift scenario through the online re-placement control loop
+(:mod:`repro.deploy.runtime`) and prints the per-step monitor table, the
+per-event recovery table, and before/after hotspot reports::
+
+    PYTHONPATH=src python -m repro.deploy replay --topology hier:2x2:4x4 \\
+        --scenario "steps=8;drift=diurnal:0.3:8;fault=link:8@2" \\
+        --compare-cold --json results/replay.json
 """
 from __future__ import annotations
 
@@ -38,7 +49,7 @@ import json
 import os
 
 from ..core.noc import NoC
-from ..core.topology import parse_topology
+from ..core.topology import degrade, parse_topology
 from ..obs import Recorder, flow_report
 from ..snn import spike_resnet18, spike_resnet50, spike_vgg16
 from .engine import SCHEDULES, deploy_model
@@ -81,20 +92,34 @@ def _add_topology_args(ap):
                          "mesh:RxC | torus:RxC | hier:CRxCC:KRxKC"
                          "[,ibw=...,ien=...,ilat=...] "
                          "(see repro.core.topology.parse_topology)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deploy on a degraded fabric: comma list of "
+                         "link:<id> / node:<core> faults present from the "
+                         "start, e.g. \"link:3,node:7\" (note ppo/policy "
+                         "refuse degraded fabrics)")
 
 
 def _resolve_topology(ap, args, cores):
     if args.topology is not None:
         try:
-            return parse_topology(args.topology, link_bw=8e9,
+            topo = parse_topology(args.topology, link_bw=8e9,
                                   core_flops=25.6e9, hop_latency=2e-8)
         except ValueError as e:
             ap.error(str(e))
-    if cores not in GRIDS:
-        ap.error(f"--cores must be one of {sorted(GRIDS)}")
-    rows, cols = GRIDS[cores]
-    return NoC(rows, cols, torus=args.torus, link_bw=8e9,
-               core_flops=25.6e9, hop_latency=2e-8)
+    else:
+        if cores not in GRIDS:
+            ap.error(f"--cores must be one of {sorted(GRIDS)}")
+        rows, cols = GRIDS[cores]
+        topo = NoC(rows, cols, torus=args.torus, link_bw=8e9,
+                   core_flops=25.6e9, hop_latency=2e-8)
+    if getattr(args, "faults", None):
+        from .runtime import parse_faults
+        try:
+            f = parse_faults(args.faults)
+            topo = degrade(topo, links=f["links"], nodes=f["nodes"])
+        except ValueError as e:           # InfeasibleTopologyError included
+            ap.error(str(e))
+    return topo
 
 
 def _write_traces(recorder, trace, chrome_trace):
@@ -164,12 +189,133 @@ def report_main(argv=None) -> int:
     return 0
 
 
+def replay_main(argv=None) -> int:
+    """``repro-deploy replay``: replay a fault/drift scenario through the
+    online re-placement loop and print the per-event recovery table."""
+    from .runtime import run_scenario
+
+    ap = argparse.ArgumentParser(
+        prog="repro-deploy replay",
+        description="Replay a fault/drift scenario through the online "
+                    "re-placement control loop (repro.deploy.runtime): "
+                    "per-step monitor table, per-event recovery table, and "
+                    "before/after NoC hotspot reports.")
+    ap.add_argument("--scenario", required=True, metavar="SPEC",
+                    help="scenario: compact grammar "
+                         "(steps=12;drift=diurnal:0.4:8;fault=link:21@3;"
+                         "repair=link:21@9;seed=7), a JSON object string, or "
+                         "a JSON file path")
+    ap.add_argument("--model", default="spike_resnet18",
+                    choices=tuple(MODELS))
+    ap.add_argument("--method", default="simulated_annealing",
+                    help="warm-startable optimize_placement method "
+                         "(simulated_annealing / genetic / random_search)")
+    ap.add_argument("--objective", default="comm_cost",
+                    help=f"base objective; names: {tuple(OBJECTIVES)}")
+    _add_topology_args(ap)
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="tolerated objective degradation before re-placing")
+    ap.add_argument("--migration-weight", type=float, default=0.05,
+                    help="state-movement penalty weight of warm re-placement "
+                         "(0 disables the migration term)")
+    ap.add_argument("--budget", type=int, default=512)
+    ap.add_argument("--escalation", type=float, default=4.0)
+    ap.add_argument("--max-retries", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare-cold", action="store_true",
+                    help="also run a from-scratch re-optimization at every "
+                         "recovery and record it next to the warm result")
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="hotspot links in the before/after flow reports")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the ScenarioResult dict to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the run's Recorder event log (JSONL)")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing / Perfetto trace JSON")
+    args = ap.parse_args(argv)
+
+    noc = _resolve_topology(ap, args, args.cores)
+    cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
+    recorder = Recorder() if (args.trace or args.chrome_trace) else None
+    try:
+        res = run_scenario(cfg, noc, args.scenario, method=args.method,
+                           objective=args.objective,
+                           threshold=args.threshold,
+                           migration_weight=args.migration_weight,
+                           budget=args.budget, escalation=args.escalation,
+                           max_retries=args.max_retries, seed=args.seed,
+                           compare_cold=args.compare_cold, recorder=recorder)
+    except ValueError as e:
+        ap.error(str(e))
+
+    print(f"scenario: {json.dumps(res.scenario)}")
+    print(f"\nmonitor ({len(res.samples)} steps):")
+    print(_csv(("t", "objective", "degradation_pct", "links_down",
+                "nodes_down", "action")))
+    for s in res.samples:
+        obj = "-" if s["objective"] is None else f"{s['objective']:.4e}"
+        deg = "-" if s["degradation"] is None \
+            else f"{100 * s['degradation']:+.1f}"
+        print(_csv((s["t"], obj, deg,
+                    ";".join(map(str, s["faults"]["links"])) or "-",
+                    ";".join(map(str, s["faults"]["nodes"])) or "-",
+                    s["action"])))
+
+    print(f"\nrecoveries ({len(res.recoveries)}):")
+    print(_csv(("t", "reason", "mode", "objective_before", "objective_after",
+                "moved_MB", "attempts")))
+    for r in res.recoveries:
+        mode = "repartition" if r["repartitioned"] else \
+            r["attempts"][-1]["mode"] if r["attempts"] else "-"
+        before = "-" if r["objective_before"] is None \
+            else f"{r['objective_before']:.4e}"
+        attempts = ";".join(f"{a['mode']}@{a['budget']}"
+                            for a in r["attempts"])
+        print(_csv((r["t"], r["reason"], mode, before,
+                    f"{r['objective_after']:.4e}",
+                    f"{r['moved_state_bytes'] / 1e6:.2f}", attempts)))
+        cold = r.get("cold_reference")
+        if cold:
+            print(f"#   cold reference @{cold['budget']}: "
+                  f"objective={cold['objective']:.4e} "
+                  f"moved_MB={cold['moved_state_bytes'] / 1e6:.2f}")
+    print(f"\ntotals: replacements={res.n_replacements} "
+          f"cold_fallbacks={res.n_cold_fallbacks} "
+          f"moved_MB={res.moved_state_bytes / 1e6:.2f} "
+          f"max_degradation={100 * res.max_degradation:+.1f}%")
+
+    final_faults = res.samples[-1]["faults"] if res.samples \
+        else {"links": [], "nodes": []}
+    final_topo = degrade(noc, links=final_faults["links"],
+                         nodes=final_faults["nodes"])
+    before = flow_report(noc, res.initial_graph, res.initial_placement,
+                         top_k=args.top_k)
+    after = flow_report(final_topo, res.final_graph, res.final_placement,
+                        top_k=args.top_k)
+    print("\ninitial placement on the starting fabric:")
+    print(before.render(top_k=args.top_k))
+    print("\nfinal placement on the surviving fabric:")
+    print(after.render(top_k=args.top_k))
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(res.to_dict(), f, indent=2)
+        print(f"# wrote {args.json}")
+    if recorder is not None:
+        _write_traces(recorder, args.trace, args.chrome_trace)
+    return 0
+
+
 def main(argv=None) -> int:
     import sys
     if argv is None:
         argv = sys.argv[1:]
     if argv and argv[0] == "report":
         return report_main(argv[1:])
+    if argv and argv[0] == "replay":
+        return replay_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="repro-deploy",
         description="End-to-end SNN deployment sweep: "

@@ -219,8 +219,10 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
     rec = recorder if recorder is not None else NULL_RECORDER
     with rec.span("deploy.profile") as sp_profile:
         name, profiles = _profiles(model, batch, training, spike_density)
+    # degraded topologies partition onto the surviving cores only
+    n_usable = getattr(noc, "n_alive_cores", noc.n_cores)
     with rec.span("deploy.partition", strategy=strategy) as sp_partition:
-        part = partition_model(profiles, noc.n_cores, strategy, core,
+        part = partition_model(profiles, n_usable, strategy, core,
                                topology=noc)
         graph = part.to_graph()
     if schedule == "one_f_one_b":
@@ -249,7 +251,7 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
             for _ in range(copartition_iters):
                 cut_w = _measured_cut_weights(cur_part, cur_graph,
                                               cur_result.placement, noc)
-                cand = partition_model(profiles, noc.n_cores, strategy, core,
+                cand = partition_model(profiles, n_usable, strategy, core,
                                        topology=noc, cut_weights=cut_w)
                 if cand.n == cur_part.n and \
                         np.array_equal(cand.chip_of, cur_part.chip_of):

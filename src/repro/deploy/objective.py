@@ -25,6 +25,11 @@ Base metric terms (all per placement, lower is better):
   historical scalar ``e_byte_hop × comm_cost`` (bit-identical).
 * ``interchip``  — bytes crossing inter-chip links (0 on flat topologies);
   lets multi-chip searches penalize boundary crossings directly.
+* ``migration``  — byte-hops to move each logical unit's resident state from
+  the core it currently occupies to the candidate placement's core
+  (:class:`MigrationSpec`; built with :func:`with_migration`). The online
+  re-placement loop (:mod:`repro.deploy.runtime`) uses it to trade recovery
+  quality against state-movement cost on warm-started searches.
 
 Chip-aware partitions (``repro.core.partition`` ``strategy="chip"``) tag the
 logical graph with their slice→chip assignment; :func:`partition_interchip_bytes`
@@ -71,9 +76,57 @@ class EnergyModel:
         return dynamic + self.p_core_static * n_cores * latency
 
 
-#: Metric names an Objective term may reference.
+#: Metric names an Objective term may reference. ``migration`` is special:
+#: it scores the *transition* between placements, needs a
+#: :class:`MigrationSpec` context on the Objective, and is evaluated from the
+#: candidate placement itself rather than from the NoC metrics.
 METRIC_TERMS = ("comm_cost", "max_link", "latency", "mean_hops", "energy",
-                "interchip")
+                "interchip", "migration")
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationSpec:
+    """Where each logical unit's resident state lives right now.
+
+    The ``migration`` objective term charges ``state_bytes[i] ×
+    hops(old_placement[i], candidate[i])`` for every unit a candidate
+    placement moves — byte-hops over the *current* (possibly degraded) fabric,
+    the same unit as ``comm_cost`` — so warm-started re-placement trades
+    recovery quality against the cost of actually moving neuron/weight state
+    between near-storage cores. ``state_bytes`` comes from the partition
+    profile (``LogicalGraph.memory``, resident bytes per slice).
+    """
+    old_placement: tuple        # unit -> core the state currently occupies
+    state_bytes: tuple          # unit -> resident bytes moved on re-place
+
+    def __post_init__(self):
+        if len(self.old_placement) != len(self.state_bytes):
+            raise ValueError("old_placement and state_bytes length mismatch")
+
+    @staticmethod
+    def from_graph(graph, placement) -> "MigrationSpec":
+        """Spec for re-placing ``graph`` currently deployed at ``placement``."""
+        return MigrationSpec(
+            tuple(int(c) for c in np.asarray(placement).tolist()),
+            tuple(float(b) for b in np.asarray(graph.memory).tolist()))
+
+    def cost(self, hops_matrix, placements):
+        """Byte-hops to migrate state: scalar for a [n] placement, [B] array
+        for a [B, n] batch."""
+        old = np.asarray(self.old_placement, dtype=np.int64)
+        sb = np.asarray(self.state_bytes, dtype=np.float64)
+        P = np.asarray(placements, dtype=np.int64)
+        hm = np.asarray(hops_matrix)
+        if P.ndim == 1:
+            return float((sb * hm[old, P]).sum())
+        return (sb[None, :] * hm[old[None, :], P]).sum(axis=1)
+
+    def moved_bytes(self, placement) -> float:
+        """Total resident bytes that change core (distance-independent)."""
+        old = np.asarray(self.old_placement, dtype=np.int64)
+        sb = np.asarray(self.state_bytes, dtype=np.float64)
+        P = np.asarray(placement, dtype=np.int64)
+        return float(sb[P != old].sum())
 
 
 def _link_dot(link_traffic, weights, topo):
@@ -95,8 +148,16 @@ class Objective:
     name: str
     terms: tuple
     energy_model: EnergyModel = EnergyModel()
+    migration: MigrationSpec | None = None
 
     def __post_init__(self):
+        # A zero-weight migration term is dropped up front so "migration off"
+        # keeps the exact historical terms tuple — and therefore the exact
+        # is_comm_cost fast path and seed-for-seed search trajectories.
+        if any(m == "migration" and w == 0.0 for m, w in self.terms):
+            object.__setattr__(self, "terms", tuple(
+                (m, w) for m, w in self.terms
+                if not (m == "migration" and w == 0.0)))
         if not self.terms:
             raise ValueError("objective needs at least one term")
         for metric, weight in self.terms:
@@ -105,6 +166,14 @@ class Objective:
                                  f"choose from {METRIC_TERMS}")
             if not np.isfinite(weight):
                 raise ValueError(f"non-finite weight for {metric!r}")
+            if metric == "migration" and self.migration is None:
+                raise ValueError(
+                    "a 'migration' term needs a MigrationSpec context — "
+                    "build the objective with with_migration(spec, ...)")
+
+    @property
+    def has_migration(self) -> bool:
+        return any(m == "migration" for m, _ in self.terms)
 
     @property
     def is_comm_cost(self) -> bool:
@@ -128,29 +197,68 @@ class Objective:
             return _link_dot(m.link_traffic, mask.astype(np.float64), noc)
         return getattr(m, metric)
 
-    def from_metrics(self, m, noc) -> float:
+    def _migration_cost(self, noc, placements):
+        if placements is None:
+            raise ValueError("objective has a 'migration' term: pass the "
+                             "candidate placement(s) to from_metrics/"
+                             "from_batch")
+        return self.migration.cost(nb.batched_noc(noc).tables.hops,
+                                   placements)
+
+    def from_metrics(self, m, noc, placement=None) -> float:
         """Scalar score from a reference
-        :class:`repro.core.topology.NoCMetrics`."""
+        :class:`repro.core.topology.NoCMetrics`. ``placement`` is only
+        required when the objective carries a ``migration`` term."""
         total = 0.0
         for metric, weight in self.terms:
-            total += weight * self._term_value(metric, m, noc)
+            if metric == "migration":
+                total += weight * self._migration_cost(noc, placement)
+            else:
+                total += weight * self._term_value(metric, m, noc)
         return float(total)
 
-    def from_batch(self, m: nb.BatchMetrics, noc) -> np.ndarray:
-        """[B] scores from a :class:`repro.core.noc_batch.BatchMetrics`."""
+    def from_batch(self, m: nb.BatchMetrics, noc,
+                   placements=None) -> np.ndarray:
+        """[B] scores from a :class:`repro.core.noc_batch.BatchMetrics`.
+        ``placements`` ([B, n]) is only required with a ``migration`` term."""
         total = np.zeros(m.comm_cost.shape[0])
         for metric, weight in self.terms:
-            total += weight * np.asarray(
-                self._term_value(metric, m, noc), np.float64)
+            if metric == "migration":
+                total += weight * np.asarray(
+                    self._migration_cost(noc, placements), np.float64)
+            else:
+                total += weight * np.asarray(
+                    self._term_value(metric, m, noc), np.float64)
         return total
 
 
 #: Named single-metric objectives. Weighted combinations are spelled as
 #: ``{metric: weight}`` dicts; ``as_objective`` normalizes either form.
+#: ``migration`` has no standalone entry — it needs a MigrationSpec context
+#: (see :func:`with_migration`).
 OBJECTIVES = {
     name: Objective(name, ((name, 1.0),))
-    for name in METRIC_TERMS
+    for name in METRIC_TERMS if name != "migration"
 }
+
+
+def with_migration(spec, migration: MigrationSpec,
+                   weight: float = 1.0) -> Objective:
+    """``spec`` (any objective spec) extended with a ``migration`` term.
+
+    ``weight`` scales migration byte-hops against the base terms; 0 returns
+    the base objective unchanged (bit-identical scoring), which is how the
+    runtime's "migration off" mode is spelled.
+    """
+    obj = as_objective(spec)
+    if obj.has_migration:
+        raise ValueError(f"objective {obj.name!r} already has a migration term")
+    if weight == 0.0:
+        return obj
+    return dataclasses.replace(
+        obj, name=f"{obj.name}+{weight:g}*migration",
+        terms=obj.terms + (("migration", float(weight)),),
+        migration=migration)
 
 
 def as_objective(spec) -> Objective:
@@ -208,12 +316,15 @@ def objective_scorer(noc, graph, objective, backend: str = "batch",
     if backend == "reference":
         def score_ref(placements):
             P = np.atleast_2d(np.asarray(placements, dtype=int))
-            return np.array([obj.from_metrics(noc.evaluate(graph, p), noc)
+            return np.array([obj.from_metrics(noc.evaluate(graph, p), noc, p)
                              for p in P])
         return score_ref
 
     b = nb.batched_noc(noc)
-    if fused and b._resolve(backend) in ("jax", "pallas"):
+    # migration is a host-side gather over the candidate placements; keep it
+    # out of the fused device kernel and combine terms on the numpy path
+    if fused and not obj.has_migration \
+            and b._resolve(backend) in ("jax", "pallas"):
         em = obj.energy_model
         return b.make_fused_scorer(graph, obj.terms,
                                    e_byte_hop=em.e_byte_hop,
@@ -227,5 +338,5 @@ def objective_scorer(noc, graph, objective, backend: str = "batch",
         if P.shape[0] == 0:
             return np.zeros(0)
         m = b.evaluate(graph, P, backend=backend, validate=False)
-        return obj.from_batch(m, noc)
+        return obj.from_batch(m, noc, P)
     return score

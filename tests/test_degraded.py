@@ -1,0 +1,250 @@
+"""Degraded-topology invariants: detour routing, BFS parity, guards.
+
+Deterministic sweeps run unconditionally; hypothesis property tests (random
+fault sets on random meshes) need the dev extra and self-skip without it.
+"""
+import numpy as np
+import pytest
+
+try:  # property tests need the dev extra; plain tests below run regardless
+    from hypothesis import given, settings, strategies as st
+    HAS_HYP = True
+except ImportError:
+    HAS_HYP = False
+
+from repro.core import (DegradedTopology, HierarchicalMesh,
+                        InfeasibleTopologyError, NoC, degrade, random_dag)
+from repro.core.noc_batch import batched_noc
+from repro.core.placement import optimize_placement
+from repro.core.placement.baselines import (greedy, sigmate,
+                                            simulated_annealing, zigzag)
+
+
+def _usable_mask(topo) -> np.ndarray:
+    """Which link ids still carry traffic (base route of their own endpoints
+    is exactly themselves and neither endpoint core is dropped)."""
+    base = topo.base if isinstance(topo, DegradedTopology) else topo
+    src, dst = base.link_src_array(), base.link_dst_array()
+    dead_l = topo.dropped_links()
+    dead_n = topo.dropped_nodes()
+    out = np.ones(base.n_links, dtype=bool)
+    for lid in range(base.n_links):
+        if lid in dead_l or int(src[lid]) in dead_n or int(dst[lid]) in dead_n:
+            out[lid] = False
+        elif base.route_ids(int(src[lid]), int(dst[lid])) != [lid]:
+            out[lid] = False      # base routing never uses it (torus wrap)
+    return out
+
+
+def _bfs_hops(topo) -> np.ndarray:
+    """Brute-force BFS hop distances over the usable directed links."""
+    base = topo.base if isinstance(topo, DegradedTopology) else topo
+    n = base.n_cores
+    usable = _usable_mask(topo)
+    src, dst = base.link_src_array(), base.link_dst_array()
+    adj = [[] for _ in range(n)]
+    for lid in np.nonzero(usable)[0]:
+        adj[int(src[lid])].append(int(dst[lid]))
+    alive = set(int(c) for c in topo.alive_cores())
+    hops = np.zeros((n, n), dtype=int)
+    for s in alive:
+        dist = {s: 0}
+        frontier = [s]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in adj[u]:
+                    if v not in dist:
+                        dist[v] = dist[u] + 1
+                        nxt.append(v)
+            frontier = nxt
+        for d in alive:
+            hops[s, d] = dist.get(d, 0)
+    return hops
+
+
+def _check_route(topo, a: int, b: int):
+    """One route's full invariant set: contiguous, usable links only, ends
+    at b, length equals the hops matrix entry."""
+    ids = topo.route_ids(a, b)
+    src, dst = topo.link_src_array(), topo.link_dst_array()
+    usable = _usable_mask(topo)
+    dead_n = topo.dropped_nodes()
+    if a == b or a in dead_n or b in dead_n:
+        assert ids == []
+        return
+    assert len(ids) == topo.hops_matrix()[a, b]
+    cur = a
+    for lid in ids:
+        assert usable[lid], f"route {a}->{b} uses unusable link {lid}"
+        assert int(src[lid]) == cur, f"route {a}->{b} not contiguous"
+        assert int(src[lid]) not in dead_n and int(dst[lid]) not in dead_n
+        cur = int(dst[lid])
+    assert cur == b
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweeps
+# ---------------------------------------------------------------------------
+
+def test_drop_link_detours_and_matches_bfs():
+    noc = NoC(4, 4, link_bw=8e9, core_flops=25.6e9, hop_latency=2e-8)
+    d = noc.drop_link(21)
+    assert isinstance(d, DegradedTopology)
+    assert 21 in d.dropped_links()
+    assert d.n_alive_cores == noc.n_cores
+    np.testing.assert_array_equal(d.hops_matrix(), _bfs_hops(d))
+    for a in range(noc.n_cores):
+        for b in range(noc.n_cores):
+            _check_route(d, a, b)
+
+
+def test_drop_node_detours_and_matches_bfs():
+    noc = NoC(4, 4, link_bw=8e9, core_flops=25.6e9, hop_latency=2e-8)
+    d = noc.drop_node(5)
+    assert d.n_alive_cores == noc.n_cores - 1
+    assert 5 not in set(int(c) for c in d.alive_cores())
+    np.testing.assert_array_equal(d.hops_matrix(), _bfs_hops(d))
+    for a in range(noc.n_cores):
+        for b in range(noc.n_cores):
+            _check_route(d, a, b)
+
+
+def test_stacked_faults_flatten_and_repair_restores_base():
+    noc = NoC(4, 4)
+    d = noc.drop_link(3).drop_node(7).drop_link(11)
+    assert isinstance(d.base, NoC)            # no nested degraded wrappers
+    assert d.dropped_links() == frozenset({3, 11})
+    assert d.dropped_nodes() == frozenset({7})
+    r = d.repair_link(3).repair_link(11).repair_node(7)
+    assert r is noc                           # full repair -> the base object
+    assert degrade(noc) is noc
+    # repairing one fault keeps the rest
+    partial = d.repair_link(11)
+    assert partial.dropped_links() == frozenset({3})
+    assert partial.dropped_nodes() == frozenset({7})
+
+
+def test_cache_keys_distinguish_fault_sets():
+    noc = NoC(4, 4)
+    keys = {noc.cache_key(), noc.drop_link(3).cache_key(),
+            noc.drop_link(5).cache_key(), noc.drop_node(3).cache_key(),
+            degrade(noc, links=(3,), nodes=(5,)).cache_key()}
+    assert len(keys) == 5
+
+
+def test_infeasible_isolation_raises():
+    noc = NoC(4, 4)
+    # dropping cores 1 and 4 isolates corner core 0
+    with pytest.raises(InfeasibleTopologyError):
+        degrade(noc, nodes=(1, 4))
+
+
+def test_placement_on_dropped_core_rejected():
+    noc = NoC(4, 4)
+    d = noc.drop_node(5)
+    g = random_dag(6, seed=0)
+    with pytest.raises(InfeasibleTopologyError, match="dropped"):
+        d.evaluate(g, np.array([0, 1, 2, 3, 4, 5]))
+    # the batched path raises the same clear error
+    with pytest.raises(InfeasibleTopologyError, match="dropped"):
+        batched_noc(d).evaluate(g, np.array([[0, 1, 2, 3, 4, 5]]))
+    d.evaluate(g, np.array([0, 1, 2, 3, 4, 6]))     # alive cores are fine
+
+
+def test_degraded_evaluate_matches_batched_tables():
+    hm = HierarchicalMesh(2, 2, 2, 2, link_bw=8e9, core_flops=25.6e9,
+                          hop_latency=2e-8)
+    d = degrade(hm, links=(5,), nodes=(9,))
+    g = random_dag(10, seed=4)
+    pl = np.asarray(d.alive_cores()[:10], dtype=int)
+    ref = d.evaluate(g, pl)
+    got = batched_noc(d).evaluate(g, pl[None, :], backend="numpy")
+    assert float(got.comm_cost[0]) == pytest.approx(ref.comm_cost, rel=1e-9)
+    assert float(got.max_link[0]) == pytest.approx(ref.max_link, rel=1e-9)
+
+
+def test_constructors_and_searches_avoid_dropped_cores():
+    hm = HierarchicalMesh(2, 2, 2, 2, link_bw=8e9, core_flops=25.6e9,
+                          hop_latency=2e-8)
+    d = degrade(hm, nodes=(3, 9))
+    g = random_dag(12, seed=1)
+    dead = {3, 9}
+    for name, pl in [
+            ("zigzag", zigzag(g.n, d)),
+            ("sigmate", sigmate(g.n, d)),
+            ("greedy", greedy(g, d)),
+            ("sa", simulated_annealing(g, d, iters=60, seed=0)),
+            ("genetic", optimize_placement(
+                g, d, method="genetic", budget=64, pop_size=8,
+                seed=0).placement),
+    ]:
+        pl = np.asarray(pl)
+        assert not (set(pl.tolist()) & dead), f"{name} used a dropped core"
+        assert len(set(pl.tolist())) == g.n, f"{name} not injective"
+
+
+def test_ppo_and_policy_refuse_degraded_topologies():
+    noc = NoC(4, 4)
+    g = random_dag(6, seed=0)
+    for method in ("ppo", "policy"):
+        with pytest.raises(ValueError, match="degraded"):
+            optimize_placement(g, noc.drop_node(5), method=method, budget=4)
+
+
+def test_intact_topologies_unchanged_by_fault_api():
+    """The fault surface must not disturb intact-topology behavior: the
+    degraded view of an empty fault set IS the base object, and the base
+    seeded searches are bit-identical to their historical streams."""
+    noc = NoC(4, 4)
+    g = random_dag(10, seed=2)
+    pl_before = simulated_annealing(g, noc, iters=80, seed=3)
+    assert degrade(noc, links=(), nodes=()) is noc
+    pl_after = simulated_annealing(g, noc, iters=80, seed=3)
+    np.testing.assert_array_equal(pl_before, pl_after)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties: random fault sets on random meshes
+# ---------------------------------------------------------------------------
+
+if HAS_HYP:
+    @given(st.integers(2, 4), st.integers(2, 4),
+           st.sets(st.integers(0, 500), max_size=4),
+           st.integers(0, 1000))
+    @settings(max_examples=40, deadline=None)
+    def test_random_link_faults_route_and_bfs_parity(rows, cols, lids, pair):
+        noc = NoC(rows, cols)
+        links = tuple(l % noc.n_links for l in lids)
+        try:
+            d = degrade(noc, links=links)
+        except InfeasibleTopologyError:
+            return                      # disconnection is a legal outcome
+        if not isinstance(d, DegradedTopology):
+            return                      # empty fault set
+        np.testing.assert_array_equal(d.hops_matrix(), _bfs_hops(d))
+        a = pair % noc.n_cores
+        b = (pair // noc.n_cores) % noc.n_cores
+        _check_route(d, a, b)
+
+    @given(st.integers(2, 4), st.integers(2, 4),
+           st.sets(st.integers(0, 200), min_size=1, max_size=3),
+           st.integers(0, 1000))
+    @settings(max_examples=40, deadline=None)
+    def test_random_node_faults_route_and_bfs_parity(rows, cols, cores, pair):
+        noc = NoC(rows, cols)
+        nodes = tuple(c % noc.n_cores for c in cores)
+        if len(set(nodes)) >= noc.n_cores - 1:
+            return                      # keep at least two alive cores
+        try:
+            d = degrade(noc, nodes=nodes)
+        except InfeasibleTopologyError:
+            return
+        np.testing.assert_array_equal(d.hops_matrix(), _bfs_hops(d))
+        a = pair % noc.n_cores
+        b = (pair // noc.n_cores) % noc.n_cores
+        _check_route(d, a, b)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+    def test_hypothesis_properties():
+        """Placeholder so missing property coverage shows as a skip."""

@@ -142,6 +142,24 @@ def test_default_objective_matches_main_snapshot(method):
     assert r.objective_cost == r.comm_cost
 
 
+@pytest.mark.parametrize("method",
+                         ["simulated_annealing", "random_search", "greedy"])
+def test_zero_weight_migration_objective_matches_main_snapshot(method):
+    """`with_migration(..., weight=0)` is the runtime's "migration off" mode:
+    it must return the base objective itself, so seeded searches land on the
+    exact pre-migration-era SNAPSHOTS stream."""
+    from repro.deploy.objective import MigrationSpec, with_migration
+    g, noc = _graph_noc()
+    spec = MigrationSpec.from_graph(g, np.arange(g.n))
+    obj = with_migration("comm_cost", spec, weight=0.0)
+    assert obj is as_objective("comm_cost")
+    r = optimize_placement(g, noc, method=method, seed=0, objective=obj,
+                           **_SNAPSHOT_CASES[method])
+    placement, comm_cost, _ = SNAPSHOTS[method]
+    assert r.placement.tolist() == placement
+    assert r.comm_cost == comm_cost
+
+
 # ---------------------------------------------------------------------------
 # non-default objectives change the optimum
 # ---------------------------------------------------------------------------
