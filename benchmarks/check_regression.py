@@ -143,6 +143,29 @@ SUITES = {
         Metric("counters.noc_batch_dispatches", rtol=DET),
         Metric("counters.noc_batch_evals", rtol=DET),
     ],
+    "device_search": [
+        # O(degree) delta-cost parity: exact vs full re-evaluation on the
+        # integer-volume model graph, Pallas kernel vs numpy in float32
+        Metric("delta_parity.numpy_exact", expect=True),
+        Metric("delta_parity.numpy_max_abs_err", max_abs=1e-9),
+        Metric("delta_parity.pallas_max_rel_err", max_abs=1e-5),
+        # timings are never gated — the *booleans* derived from them are:
+        # the one-dispatch SA must clear its smoke speedup floor, and the
+        # vmapped restart fan-out must beat the single chain at far below
+        # linear wall-time scaling
+        Metric("headline.speedup_ok", expect=True),
+        Metric("restarts.restarts_improve_ok", expect=True),
+        Metric("restarts.restarts_wall_ok", expect=True),
+        Metric("recorder_identity.results_identical", expect=True),
+        # device best costs are jax(float32)-backed: wide band like PPO
+        Metric("headline.device_comm_cost", rtol=PPO_BAND),
+        Metric("restarts.curve.1.best_cost", rtol=PPO_BAND),
+        Metric("ga.device_comm_cost", rtol=PPO_BAND),
+        # host references on the same shape stay numpy-deterministic
+        Metric("headline.host_comm_cost", rtol=DET),
+        Metric("ga.host_comm_cost", rtol=DET),
+        Metric("counters.sa_accepted", rtol=PPO_BAND),
+    ],
     "multichip": [
         Metric("cases.0.comm_cost", rtol=DET),                 # zigzag
         Metric("cases.1.comm_cost", rtol=DET),                 # sigmate
@@ -187,11 +210,12 @@ SUITES = {
 
 def _run_suite(name: str, json_path: str) -> None:
     """Run one suite's smoke mode in-process, record written to json_path."""
-    from . import (copartition, deploy_e2e, fault_replace, multichip,
-                   noc_eval, ppo_pipeline)
+    from . import (copartition, deploy_e2e, device_search, fault_replace,
+                   multichip, noc_eval, ppo_pipeline)
     fn = {"noc_eval": noc_eval.noc_eval,
           "ppo_pipeline": ppo_pipeline.ppo_pipeline,
           "deploy_e2e": deploy_e2e.deploy_e2e,
+          "device_search": device_search.device_search,
           "multichip": multichip.multichip,
           "copartition": copartition.copartition,
           "fault_replace": fault_replace.fault_replace}[name]

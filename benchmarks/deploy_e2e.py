@@ -15,9 +15,10 @@ import os
 
 import numpy as np
 
-from .common import (SPIKE_MODELS, counter_record, make_noc, write_record,
-                     write_trace)
+from .common import (SPIKE_MODELS, bench_percentiles, counter_record,
+                     make_noc, model_graph, write_record, write_trace)
 
+from repro.core.placement import optimize_placement  # noqa: E402
 from repro.core.placement.ppo import PPOConfig  # noqa: E402
 from repro.deploy import deploy_model  # noqa: E402
 from repro.obs import Recorder  # noqa: E402
@@ -103,6 +104,28 @@ def deploy_e2e(smoke: bool = False, json_path: str | None = None):
         f"deploy_e2e.objective_demo.{demo_model}", 0.0,
         f"max_link obj cuts peak link x{reduction:.2f} vs comm optimum "
         f"(placements_differ={placements_differ})"))
+
+    # ---- placement latency distribution (p50/p99, not just the mean) ----
+    # the `place` stage dominates sweep wall time; measure its distribution
+    # for the host SA and the device-resident SA (single chain and a
+    # 16-restart fan-out) at the suite's shape. recorder=None on purpose:
+    # these extra runs must not move the suite's gated work counters.
+    graph, _ = model_graph(demo_model, 32)
+    repeats = 5 if smoke else 20
+    lat = {}
+    for label, okw in (
+            ("sa_batch", {}),
+            ("sa_device", {"backend": "device"}),
+            ("sa_device_r16", {"backend": "device", "restarts": 16})):
+        def place(okw=okw):
+            optimize_placement(graph, noc, method="simulated_annealing",
+                               seed=0, budget=sa_budget, **okw)
+        lat[label] = bench_percentiles(place, repeats=repeats, warmup=1)
+    record["placement_latency"] = lat
+    rows_out.append((
+        "deploy_e2e.placement_latency", lat["sa_batch"]["p50"] * 1e6,
+        " ".join(f"{k}:p50={v['p50']*1e3:.1f}ms,p99={v['p99']*1e3:.1f}ms"
+                 for k, v in lat.items())))
 
     record["counters"] = counter_record(recorder)
     rows_out.append(("deploy_e2e.counters", 0.0,

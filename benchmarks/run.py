@@ -17,9 +17,9 @@ def main() -> None:
                          "error, rows) to PATH")
     args = ap.parse_args()
 
-    from . import (copartition, deploy_e2e, fault_replace, multichip,
-                   noc_eval, paper_figs, ppo_pipeline, roofline, spike_kernel,
-                   tpu_placement)
+    from . import (copartition, deploy_e2e, device_search, fault_replace,
+                   multichip, noc_eval, paper_figs, ppo_pipeline, roofline,
+                   spike_kernel, tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -30,6 +30,7 @@ def main() -> None:
         ("noc_eval", noc_eval.noc_eval),
         ("ppo_pipeline", ppo_pipeline.ppo_pipeline),
         ("deploy_e2e", deploy_e2e.deploy_e2e),
+        ("device_search", device_search.device_search),
         ("multichip", multichip.multichip),
         ("copartition", copartition.copartition),
         ("fault_replace", fault_replace.fault_replace),
@@ -43,9 +44,10 @@ def main() -> None:
     # spiral); deploy_e2e / multichip sweep full placement searches per model
     # x objective (multichip includes a PPO run on 64 cores); fault_replace
     # replays minute-scale scenario sweeps on the 64-core fabric (the nightly
-    # job runs it as its own step, so --fast skipping it avoids a double run)
+    # job runs it as its own step, so --fast skipping it avoids a double run);
+    # device_search repeats full-budget searches for latency percentiles
     fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip",
-                 "fault_replace"}
+                 "fault_replace", "device_search"}
     print("name,us_per_call,derived")
     suites = []          # per-suite run records (the --json artifact)
     failed = []

@@ -1,6 +1,9 @@
-from .optimizer import optimize_placement, PlacementResult, METHODS  # noqa: F401
+from .optimizer import (optimize_placement, PlacementResult,  # noqa: F401
+                        METHODS, METHOD_ALIASES)
 from .baselines import (chip_init, zigzag, sigmate, random_search,  # noqa: F401
                         simulated_annealing)
 from .population import (genetic_population,  # noqa: F401
                          random_search_population,
                          simulated_annealing_population)
+from .device_search import (genetic_device,  # noqa: F401
+                            simulated_annealing_device)

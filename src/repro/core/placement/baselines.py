@@ -134,7 +134,8 @@ def random_search(graph, noc, iters: int = 2000, seed: int = 0,
 def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
                         t_end_frac: float = 1e-3, seed: int = 0,
                         init=None, backend: str = "batch",
-                        objective="comm_cost", recorder=None) -> np.ndarray:
+                        objective="comm_cost", recorder=None,
+                        decay_on_degenerate: bool = False) -> np.ndarray:
     """Pairwise-swap SA over placements (beyond-paper local-search reference,
     cf. cyclic RL+SA placement [Vashisht et al. 2020]).
 
@@ -144,6 +145,14 @@ def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
     ``recorder`` emits exactly one ``sa.iter`` event per step (current/best
     cost, temperature, accepted flag) and counts accepted moves; detached it
     costs one None-check per step and the trajectory is bit-identical.
+
+    Degenerate proposals (``i == j``, or both indices in the free-core tail)
+    historically skipped the ``t *= cooling`` decay, so the realized schedule
+    stretches with the collision count instead of ending at
+    ``t0 × t_end_frac`` after ``iters`` steps. ``decay_on_degenerate=True``
+    decays unconditionally (the intended geometric schedule — and what the
+    device backend implements); the default ``False`` keeps the historical
+    trajectory bit-for-bit.
     """
     rng = np.random.default_rng(seed)
     score = make_scorer(noc, graph, backend, objective, recorder=recorder)
@@ -163,6 +172,8 @@ def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
         accepted = False
         i, j = rng.integers(0, len(slots), 2)
         if i == j or (i >= n and j >= n):
+            if decay_on_degenerate:
+                t *= cooling
             if recorder is not None:
                 recorder.event("sa.iter", iter=it, cost=cost,
                                best_cost=best_cost, temperature=t,
@@ -190,9 +201,40 @@ def simulated_annealing(graph, noc, iters: int = 5000, t0: float = 0.05,
 def greedy(graph, noc) -> np.ndarray:
     """Constructive greedy: place nodes in topological-ish (index) order, each at
     the free core minimizing the incremental hop-weighted cost to already-placed
-    neighbours."""
+    neighbours.
+
+    Vectorized over the core axis with the precomputed hop matrix
+    (:func:`repro.core.noc_batch.build_tables`): each node costs two
+    hop-matrix products instead of an O(n_cores × n) Python loop of
+    ``noc.hops`` calls. Identical placements to the per-pair reference
+    (:func:`_greedy_reference`) — ``np.argmin`` keeps the same
+    first-strict-minimum tie-break, and on integer-volume graphs every
+    incremental cost is an exactly-representable float64 sum.
+    """
+    from ..noc_batch import batched_noc
+    hops = batched_noc(noc).tables.hops.astype(np.float64)
     placement = np.full(graph.n, -1, dtype=int)
-    taken = {int(c) for c in noc.dropped_nodes()}   # never place on dead cores
+    taken = np.zeros(noc.n_cores, dtype=bool)
+    dropped = np.asarray(sorted(noc.dropped_nodes()), dtype=int)
+    taken[dropped] = True                 # never place on dead cores
+    adj = graph.adj
+    for node in range(graph.n):
+        placed = np.nonzero(placement >= 0)[0]
+        pcores = placement[placed]
+        inc = hops[:, pcores] @ adj[node, placed] \
+            + adj[placed, node] @ hops[pcores, :]
+        inc[taken] = np.inf
+        core = int(np.argmin(inc))        # first minimum, like the reference
+        placement[node] = core
+        taken[core] = True
+    return placement
+
+
+def _greedy_reference(graph, noc) -> np.ndarray:
+    """Original per-pair greedy loop (O(n² · n_cores) ``noc.hops`` calls) —
+    kept as the parity oracle :func:`greedy` is tested against."""
+    placement = np.full(graph.n, -1, dtype=int)
+    taken = {int(c) for c in noc.dropped_nodes()}
     adj = graph.adj
     for node in range(graph.n):
         best_core, best_inc = None, np.inf

@@ -13,7 +13,12 @@ bit-identical to the reference loop on integer-volume graphs, last-ulp
 summation differences possible on continuous volumes), ``"jax"`` (jit+vmap,
 for accelerator hosts / big populations), or ``"reference"`` (the original
 per-edge Python loop). The ``population_*`` methods score whole populations
-per call.
+per call. ``backend="device"`` (``simulated_annealing``/``sa`` and
+``genetic``/``ga`` only) switches to the fully device-resident
+whole-search-in-one-dispatch implementations of
+:mod:`repro.core.placement.device_search` — O(degree) delta costs, plus
+``restarts=N`` vmap-style parallel SA chains — a float32 method variant,
+not a bit-replay of the host backends.
 
 ``objective`` selects *what* the searches minimize (see
 :mod:`repro.deploy.objective`): the default ``"comm_cost"`` keeps every method
@@ -32,7 +37,7 @@ import numpy as np
 
 from ...deploy.objective import as_objective
 from ...obs import maybe_span
-from . import baselines, population
+from . import baselines, device_search, population
 from .policy_baseline import PolicyConfig, run_policy_baseline
 from .ppo import PPOConfig, run_ppo
 
@@ -68,6 +73,10 @@ class PlacementResult:
 METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
            "greedy", "policy", "ppo", "genetic",
            "population_random_search", "population_simulated_annealing")
+
+# short spellings accepted by optimize_placement (paper/CLI shorthand)
+METHOD_ALIASES = {"sa": "simulated_annealing", "ga": "genetic",
+                  "rs": "random_search"}
 
 
 def _chip_seed(graph, noc):
@@ -106,8 +115,13 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     (``zigzag``/``sigmate``/``greedy``) stay chip-oblivious baselines.
     """
     history = None
+    method = METHOD_ALIASES.get(method, method)
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
+    if bk == "device" and method not in ("simulated_annealing", "genetic"):
+        raise ValueError(
+            f"backend='device' implements simulated_annealing (sa) and "
+            f"genetic (ga) only, not {method!r}")
     if method in ("ppo", "policy") and \
             getattr(noc, "n_alive_cores", noc.n_cores) != noc.n_cores:
         raise ValueError(
@@ -122,6 +136,9 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                  if method in init_methods + ("ppo", "policy") else None)
     if chip_seed is not None and method in init_methods:
         kw.setdefault("init", chip_seed)
+    # RL methods have no init hook; a user-supplied ``init`` (e.g. a fast
+    # device-SA placement) joins the best-of candidate set like the chip seed
+    rl_init = (kw.pop("init", None) if method in ("ppo", "policy") else None)
     with maybe_span(recorder, f"place.{method}", seed=seed,
                     backend=bk) as sp:
         if method == "zigzag":
@@ -133,9 +150,15 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                 graph, noc, iters=kw.pop("iters", None) or budget or 2000,
                 seed=seed, backend=bk, objective=ob, recorder=recorder, **kw)
         elif method == "simulated_annealing":
-            placement = baselines.simulated_annealing(
-                graph, noc, iters=kw.pop("iters", None) or budget or 5000,
-                seed=seed, backend=bk, objective=ob, recorder=recorder, **kw)
+            iters = kw.pop("iters", None) or budget or 5000
+            if bk == "device":
+                placement = device_search.simulated_annealing_device(
+                    graph, noc, iters=iters, seed=seed, objective=ob,
+                    recorder=recorder, **kw)
+            else:
+                placement = baselines.simulated_annealing(
+                    graph, noc, iters=iters, seed=seed, backend=bk,
+                    objective=ob, recorder=recorder, **kw)
         elif method == "population_random_search":
             placement = population.random_search_population(
                 graph, noc, iters=kw.pop("iters", None) or budget or 2000,
@@ -157,9 +180,14 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
             gens = kw.pop("generations", None)
             if gens is None:
                 gens = max(1, (budget or 6400) // max(pop, 1) - 1)
-            placement = population.genetic_population(
-                graph, noc, generations=gens, seed=seed, backend=bk,
-                objective=ob, recorder=recorder, **kw)
+            if bk == "device":
+                placement = device_search.genetic_device(
+                    graph, noc, generations=gens, seed=seed,
+                    objective=ob, recorder=recorder, **kw)
+            else:
+                placement = population.genetic_population(
+                    graph, noc, generations=gens, seed=seed, backend=bk,
+                    objective=ob, recorder=recorder, **kw)
         elif method == "greedy":
             placement = baselines.greedy(graph, noc)
         elif method == "policy":
@@ -188,13 +216,17 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
 
         obj = as_objective(ob)
         m = noc.evaluate(graph, placement)
-        if chip_seed is not None and method in ("ppo", "policy"):
-            # RL methods have no init hook; seed them by including the
-            # chip-respecting constructor in the best-of candidate set
-            m_seed = noc.evaluate(graph, chip_seed)
-            if obj.from_metrics(m_seed, noc, chip_seed) < \
-                    obj.from_metrics(m, noc, placement):
-                placement, m = chip_seed, m_seed
+        if method in ("ppo", "policy"):
+            # best-of candidate set: the chip-respecting constructor and any
+            # user-supplied seed placement compete with the RL result
+            for cand in (chip_seed, rl_init):
+                if cand is None:
+                    continue
+                cand = np.asarray(cand, dtype=int)
+                m_seed = noc.evaluate(graph, cand)
+                if obj.from_metrics(m_seed, noc, cand) < \
+                        obj.from_metrics(m, noc, placement):
+                    placement, m = cand, m_seed
     return PlacementResult(
         method=method, placement=np.asarray(placement),
         comm_cost=m.comm_cost, mean_hops=m.mean_hops, latency=m.latency,

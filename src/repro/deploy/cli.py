@@ -122,6 +122,18 @@ def _resolve_topology(ap, args, cores):
     return topo
 
 
+def _restarts_kw(ap, args) -> dict:
+    """``--restarts N`` as an optimize_placement kwarg (device backend only —
+    the host SA has no parallel-chain notion, so reject the combination)."""
+    if args.restarts is None:
+        return {}
+    if args.backend != "device":
+        ap.error("--restarts requires --backend device")
+    if args.restarts < 1:
+        ap.error("--restarts must be >= 1")
+    return {"restarts": args.restarts}
+
+
 def _write_traces(recorder, trace, chrome_trace):
     for path, writer in ((trace, recorder.write_jsonl),
                          (chrome_trace, recorder.write_chrome_trace)):
@@ -151,7 +163,11 @@ def report_main(argv=None) -> int:
                              "chip", "chip_balanced"))
     ap.add_argument("--budget", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", default=None)
+    ap.add_argument("--backend", default=None,
+                    help="scoring backend override (batch|jax|pallas|"
+                         "reference, or device for the one-dispatch SA/GA)")
+    ap.add_argument("--restarts", type=int, default=None, metavar="N",
+                    help="parallel SA restart chains (backend=device only)")
     ap.add_argument("--top-k", type=int, default=10,
                     help="hotspot links to list")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -169,7 +185,8 @@ def report_main(argv=None) -> int:
     plan = deploy_model(cfg, noc, partition_strategy=args.strategy,
                         method=args.method, objective=args.objective,
                         schedule="none", seed=args.seed, budget=args.budget,
-                        backend=args.backend, recorder=recorder)
+                        backend=args.backend, recorder=recorder,
+                        **_restarts_kw(ap, args))
     rep = flow_report(noc, plan.graph, plan.placement, top_k=args.top_k)
     d = noc.describe()
     topo = f"{d.get('kind', 'grid')} {d.get('rows')}x{d.get('cols')}" \
@@ -350,7 +367,11 @@ def main(argv=None) -> int:
                     help="search budget (evaluations / iterations)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default=None,
-                    help="scoring backend override (batch|jax|pallas|reference)")
+                    help="scoring backend override (batch|jax|pallas|"
+                         "reference, or device for the one-dispatch SA/GA "
+                         "of simulated_annealing/genetic)")
+    ap.add_argument("--restarts", type=int, default=None, metavar="N",
+                    help="parallel SA restart chains (backend=device only)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write full DeploymentPlan reports to PATH")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -378,6 +399,13 @@ def main(argv=None) -> int:
     for model_name in models:            # fail on typos before any sweep runs
         if model_name not in MODELS:
             ap.error(f"unknown model {model_name!r}; choose from {tuple(MODELS)}")
+    if args.backend == "device":         # device runs sa/ga only — fail early
+        bad = [m for m in methods
+               if m not in ("sa", "ga", "simulated_annealing", "genetic")]
+        if bad:
+            ap.error(f"--backend device implements sa/ga only; drop {bad} "
+                     "from --methods (default smoke/sweep lists include "
+                     "constructors)")
 
     # one recorder across the whole sweep: deployments show up as consecutive
     # span groups, counters accumulate sweep-wide
@@ -394,7 +422,7 @@ def main(argv=None) -> int:
                     seed=args.seed, budget=budget, backend=args.backend,
                     contention_feedback=args.contention_feedback,
                     copartition_iters=args.copartition_iters,
-                    recorder=recorder)
+                    recorder=recorder, **_restarts_kw(ap, args))
                 reports.append(plan.report())
                 print(_csv(_row(plan)))
 

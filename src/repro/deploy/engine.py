@@ -174,7 +174,11 @@ def deploy_model(model, noc, partition_strategy: str = "auto",
     ``HierarchicalMesh`` — the ``--topology`` CLI spec parses to one).
     ``method``/``objective``/``backend``/``budget``/``method_kw`` go to
     :func:`optimize_placement`; ``schedule`` is one of :data:`SCHEDULES`
-    ("none" skips the scheduling stage).
+    ("none" skips the scheduling stage). ``backend="device"`` with
+    ``method="simulated_annealing"``/``"genetic"`` (aliases ``sa``/``ga``)
+    runs the whole search in one compiled device dispatch
+    (:mod:`repro.core.placement.device_search`); pass ``restarts=N`` through
+    ``method_kw`` for parallel SA restart chains.
 
     ``partition_strategy="auto"`` (the default) selects the chip-aware
     ``"chip"`` strategy on multi-chip topologies and the historical

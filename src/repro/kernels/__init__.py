@@ -1,1 +1,1 @@
-from . import noc_segsum, ops, ref  # noqa: F401
+from . import delta_cost, noc_segsum, ops, ref  # noqa: F401

@@ -1,0 +1,106 @@
+"""Tiled O(degree) swap-delta kernel for placement search (Pallas, TPU target).
+
+A pairwise swap of two placement slots only perturbs the edges incident to
+the (at most two) moved nodes, so the comm-cost change of a proposed swap is
+
+    delta = sum_k vol[k] * (hops[src_after[k], dst_after[k]]
+                            - hops[src_before[k], dst_before[k]])
+
+over the K incident-edge entries the host gathers from
+``noc_batch.IncidentTables`` (padding entries carry ``vol == 0``). The
+device-resident SA chains of :mod:`repro.core.placement.device_search`
+evaluate one such delta per chain per step; this kernel batches the R chains
+as the grid's first axis and recasts both hop gathers as one-hot matmuls so
+they map straight onto the MXU (same trick as ``noc_segsum``): for each tile
+of ``bk`` entries, ``one_hot(src) @ hops`` pulls the needed hop-matrix rows
+and a masked row-sum against ``one_hot(dst)`` selects the column — no
+dynamic-index gathers, which lower poorly on TPU.
+
+The core axis is padded to a lane multiple (128); padded entries index core 0
+with weight 0. Accumulation is float32 in a VMEM scratch row, flushed on the
+last k-step (init/flush idiom of ``noc_segsum``/``spike_matmul``). On CPU the
+kernel runs in interpret mode; on TPU the same code compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _delta_kernel(src_b_ref, dst_b_ref, src_a_ref, dst_a_ref, vol_ref,
+                  hops_ref, o_ref, acc_ref, *, n_k: int):
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hops = hops_ref[...]                                 # [Cp, Cp] float32
+    cp = hops.shape[1]
+    bk = vol_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bk, cp), 1)
+
+    def gather(s_ref, d_ref):
+        # hops[s, d] per entry: one-hot(s) @ hops selects rows on the MXU,
+        # the masked row-sum against one-hot(d) selects the column.
+        oh_s = (s_ref[...].reshape(bk, 1) == iota).astype(jnp.float32)
+        rows = jnp.dot(oh_s, hops, preferred_element_type=jnp.float32)
+        oh_d = (d_ref[...].reshape(bk, 1) == iota).astype(jnp.float32)
+        return jnp.sum(rows * oh_d, axis=1, keepdims=True)   # [bk, 1]
+
+    diff = gather(src_a_ref, dst_a_ref) - gather(src_b_ref, dst_b_ref)
+    acc_ref[...] += jnp.sum(vol_ref[...].reshape(bk, 1) * diff)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def delta_cost_pallas(src_b, dst_b, src_a, dst_a, vol, hops, *,
+                      block_k: int = 256, interpret: bool = False):
+    """Per-chain swap deltas ``[R]`` from incident-edge entry tables.
+
+    src_b/dst_b/src_a/dst_a [R, K] int32 core ids in ``[0, C)`` (before/after
+    endpoints of each incident edge; padding may index any valid core), vol
+    [R, K] float weights (0 on padding), hops [C, C] hop matrix. Returns
+    float32 ``[R]`` = sum(vol * (hops[after] - hops[before])) per chain.
+    """
+    R, K = vol.shape
+    C = hops.shape[0]
+    assert hops.shape == (C, C), hops.shape
+    for a in (src_b, dst_b, src_a, dst_a):
+        assert a.shape == (R, K), (a.shape, (R, K))
+    cp = _round_up(C, 128)
+    hops_p = jnp.zeros((cp, cp), jnp.float32).at[:C, :C].set(
+        hops.astype(jnp.float32))
+    bk = min(block_k, _round_up(max(K, 1), 128))
+    Kp = _round_up(max(K, 1), bk)
+    if Kp != K:
+        pad = ((0, 0), (0, Kp - K))
+        src_b, dst_b, src_a, dst_a = (jnp.pad(a, pad)
+                                      for a in (src_b, dst_b, src_a, dst_a))
+        vol = jnp.pad(vol, pad)
+    n_k = Kp // bk
+    kern = functools.partial(_delta_kernel, n_k=n_k)
+    ent = pl.BlockSpec((1, bk), lambda r, k: (r, k))
+    out = pl.pallas_call(
+        kern,
+        grid=(R, n_k),
+        in_specs=[ent, ent, ent, ent, ent,
+                  pl.BlockSpec((cp, cp), lambda r, k: (0, 0))],
+        out_specs=pl.BlockSpec((1, 128), lambda r, k: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 128), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 128), jnp.float32)],
+        interpret=interpret,
+    )(src_b.astype(jnp.int32), dst_b.astype(jnp.int32),
+      src_a.astype(jnp.int32), dst_a.astype(jnp.int32),
+      vol.astype(jnp.float32), hops_p)
+    return out[:, 0]

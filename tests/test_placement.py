@@ -153,3 +153,61 @@ def test_random_search_monotone_in_budget():
     c1 = noc.evaluate(g, random_search(g, noc, iters=20, seed=3)).comm_cost
     c2 = noc.evaluate(g, random_search(g, noc, iters=400, seed=3)).comm_cost
     assert c2 <= c1
+
+
+def test_greedy_matches_reference():
+    """Vectorized greedy pins identical placements to the per-pair oracle —
+    integer and continuous volumes, intact and degraded fabrics."""
+    from repro.core.placement.baselines import _greedy_reference, greedy
+    from repro.core.topology import degrade
+    noc = NoC(4, 8)
+    for seed in range(5):
+        g = random_dag(20, seed=seed)
+        gi = random_dag(20, seed=seed)
+        gi.adj[:] = np.round(gi.adj)
+        for graph in (g, gi):
+            assert np.array_equal(greedy(graph, noc),
+                                  _greedy_reference(graph, noc))
+    dt = degrade(noc, nodes=(0, 7))
+    g = random_dag(20, seed=11)
+    p = greedy(g, dt)
+    assert np.array_equal(p, _greedy_reference(g, dt))
+    assert not {0, 7} & set(p.tolist())
+
+
+def test_sa_degenerate_decay_schedules():
+    """Default keeps the historical stretched schedule (degenerate proposals
+    skip the decay); decay_on_degenerate=True realizes the intended fixed
+    geometric schedule ending at t_init * t_end_frac."""
+    from repro.obs import Recorder
+    g = random_dag(28, seed=5)
+    g.adj[:] = np.round(g.adj)
+    noc = NoC(4, 8)
+    iters, t_end_frac = 500, 1e-3
+    cooling = t_end_frac ** (1.0 / iters)
+
+    runs = {}
+    for flag in (False, True):
+        rec = Recorder()
+        p = simulated_annealing(g, noc, iters=iters, seed=0,
+                                t_end_frac=t_end_frac, recorder=rec,
+                                decay_on_degenerate=flag)
+        ev = [e["attrs"] for e in rec.events if e["name"] == "sa.iter"]
+        assert len(ev) == iters
+        runs[flag] = (p, ev)
+
+    n_degen = sum(not e["proposed"] for e in runs[False][1])
+    assert n_degen > 0                    # the stream does collide here
+    t_init = runs[False][1][0]["temperature"] / (
+        cooling if runs[False][1][0]["proposed"] else 1.0)
+    # historical default: decay happens on the proposed steps only
+    np.testing.assert_allclose(
+        runs[False][1][-1]["temperature"],
+        t_init * cooling ** (iters - n_degen), rtol=1e-9)
+    # fixed schedule: exactly iters decays regardless of collisions
+    np.testing.assert_allclose(
+        runs[True][1][-1]["temperature"],
+        t_init * cooling ** iters, rtol=1e-9)
+    # the proposal/accept RNG stream is untouched by the flag at these
+    # temperatures: same placement either way, so default stays bit-identical
+    assert np.array_equal(runs[False][0], runs[True][0])
