@@ -166,6 +166,23 @@ SUITES = {
         Metric("ga.host_comm_cost", rtol=DET),
         Metric("counters.sa_accepted", rtol=PPO_BAND),
     ],
+    "multilevel": [
+        # timings never gated; the derived booleans are: the V-cycle must
+        # clear its smoke speedup floor vs flat SA at equal-or-better cost,
+        # and the 16k-node placement must complete validly
+        Metric("headline.speedup_ok", expect=True),
+        Metric("headline.cost_ok", expect=True),
+        Metric("large.completed", expect=True),
+        Metric("large.valid", expect=True),
+        # the V-cycle and the flat host SA are numpy-deterministic
+        Metric("headline.flat_comm_cost", rtol=DET),
+        Metric("headline.ml_comm_cost", rtol=DET),
+        Metric("large.comm_cost", rtol=DET),
+        Metric("large.n_levels", rtol=DET),
+        Metric("identity.delegation_identical", expect=True),
+        Metric("recorder_identity.results_identical", expect=True),
+        Metric("counters.ml_levels", rtol=DET),
+    ],
     "multichip": [
         Metric("cases.0.comm_cost", rtol=DET),                 # zigzag
         Metric("cases.1.comm_cost", rtol=DET),                 # sigmate
@@ -211,11 +228,12 @@ SUITES = {
 def _run_suite(name: str, json_path: str) -> None:
     """Run one suite's smoke mode in-process, record written to json_path."""
     from . import (copartition, deploy_e2e, device_search, fault_replace,
-                   multichip, noc_eval, ppo_pipeline)
+                   multichip, multilevel, noc_eval, ppo_pipeline)
     fn = {"noc_eval": noc_eval.noc_eval,
           "ppo_pipeline": ppo_pipeline.ppo_pipeline,
           "deploy_e2e": deploy_e2e.deploy_e2e,
           "device_search": device_search.device_search,
+          "multilevel": multilevel.multilevel,
           "multichip": multichip.multichip,
           "copartition": copartition.copartition,
           "fault_replace": fault_replace.fault_replace}[name]

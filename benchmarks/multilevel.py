@@ -1,0 +1,202 @@
+"""Benchmark: multilevel placement (`repro.core.placement.multilevel`).
+
+Pins the PR's two headline claims:
+
+* **10^3-node headline** — a 1024-node layered DAG (node ids shuffled, so no
+  placement quality comes from id-locality) on the 32x32 grid: the V-cycle
+  must reach equal-or-better comm cost than the flat batch-backend SA at
+  >= 10x less wall time (smoke gates a conservative floor so loaded CI
+  runners don't flake). Full runs add the flat GA reference on the same
+  instance.
+* **Scale headline** — the first end-to-end placement of a >= 16k-node
+  logical graph: a 64-block/254-expert MoE DAG (16384 nodes) on a 4x4-chip
+  HierarchicalMesh (128x128 cores), where flat search cannot even build its
+  route tables (O(n_cores^2 * hops) ~ 250 GiB). Gated on completion,
+  placement validity, and the deterministic final cost. Full runs add a
+  transformer-derived graph from the configs registry.
+
+Timings are machine-dependent so the regression gate never compares them —
+it gates the derived booleans (``speedup_ok``, ``cost_ok``, completion and
+validity bits, delegation identity, recorder identity) plus the
+numpy-deterministic comm costs at the tight band.
+
+Emits ``results/BENCH_multilevel.json`` and run.py CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from .common import bench_percentiles, counter_record, write_record, write_trace
+
+from repro.core import LogicalGraph, random_dag  # noqa: E402
+from repro.core.graph import layered_dag, moe_dag  # noqa: E402
+from repro.core.noc_batch import batched_noc  # noqa: E402
+from repro.core.placement import optimize_placement  # noqa: E402
+from repro.core.placement.multilevel import (grid_comm_cost,  # noqa: E402
+                                             multilevel_placement)
+from repro.core.topology import GridTopology, HierarchicalMesh  # noqa: E402
+from repro.obs import Recorder  # noqa: E402
+
+# flat SA budgets sized so the comparison is honest: the flat search gets an
+# order of magnitude more wall time than the V-cycle and still must not win
+FLAT_BUDGET = {"full": 200_000, "smoke": 50_000}
+SPEEDUP_FLOOR = {"full": 10.0, "smoke": 4.0}
+ML_KW = dict(coarsen_to=64, refine_iters=3, iters=2000)
+
+
+def _headline_graph():
+    """1024-node layered DAG with ids shuffled — partitioned graphs don't
+    arrive with node order encoding 2-D locality, and an unshuffled layered
+    DAG hands every id-ordered constructor a near-optimal placement."""
+    g = layered_dag(32, 32, seed=0)
+    perm = np.random.default_rng(1).permutation(g.n)
+    adj = g.adj[np.ix_(perm, perm)]
+    return LogicalGraph(adj, g.compute[perm], g.memory[perm])
+
+
+def multilevel(smoke: bool = False, json_path: str | None = None):
+    mode = "smoke" if smoke else "full"
+    record = {"smoke": smoke}
+    rows_out = []
+
+    # ---- headline: 10^3 nodes, flat SA vs V-cycle -----------------------
+    graph = _headline_graph()
+    noc = GridTopology(32, 32)
+    batched_noc(noc)          # route tables build once per process; warm them
+    # outside the timed region so both sides pay nothing
+
+    def flat_sa():
+        return optimize_placement(graph, noc, method="simulated_annealing",
+                                  seed=0, iters=FLAT_BUDGET[mode])
+
+    def ml():
+        return multilevel_placement(graph, noc, seed=0, **ML_KW)
+
+    flat_res = flat_sa()
+    flat_lat = bench_percentiles(flat_sa, repeats=1 if smoke else 3, warmup=0)
+    ml_p = ml()
+    ml_lat = bench_percentiles(ml, repeats=2 if smoke else 5, warmup=0)
+    ml_cost = grid_comm_cost(graph, noc, ml_p)
+    speedup = flat_lat["p50"] / max(ml_lat["p50"], 1e-12)
+    record["headline"] = {
+        "n_nodes": graph.n, "n_cores": noc.n_cores,
+        "flat_budget": FLAT_BUDGET[mode],
+        "flat_p50_s": flat_lat["p50"], "ml_p50_s": ml_lat["p50"],
+        "speedup_p50": speedup,
+        "speedup_floor": SPEEDUP_FLOOR[mode],
+        "speedup_ok": speedup >= SPEEDUP_FLOOR[mode],
+        "flat_comm_cost": float(flat_res.comm_cost),
+        "ml_comm_cost": ml_cost,
+        "cost_ok": bool(ml_cost <= flat_res.comm_cost),
+    }
+    rows_out.append((
+        "multilevel.headline", ml_lat["p50"] * 1e6,
+        f"flat_p50={flat_lat['p50']:.2f}s ml_p50={ml_lat['p50']:.2f}s "
+        f"speedup=x{speedup:.1f} (floor x{SPEEDUP_FLOOR[mode]:g}) "
+        f"cost flat={flat_res.comm_cost:.3e} ml={ml_cost:.3e} "
+        f"ok={record['headline']['speedup_ok'] and record['headline']['cost_ok']}"))
+
+    if not smoke:
+        def flat_ga():
+            return optimize_placement(graph, noc, method="genetic", seed=0,
+                                      pop_size=64, generations=100)
+        ga_res = flat_ga()
+        ga_lat = bench_percentiles(flat_ga, repeats=3, warmup=0)
+        record["headline"]["ga_comm_cost"] = float(ga_res.comm_cost)
+        record["headline"]["ga_p50_s"] = ga_lat["p50"]
+        record["headline"]["cost_ok_vs_ga"] = bool(ml_cost <= ga_res.comm_cost)
+        rows_out.append((
+            "multilevel.vs_ga", ga_lat["p50"] * 1e6,
+            f"ga_p50={ga_lat['p50']:.2f}s cost ga={ga_res.comm_cost:.3e} "
+            f"ml={ml_cost:.3e} ok={record['headline']['cost_ok_vs_ga']}"))
+
+    # ---- scale headline: 16k-node MoE DAG on a 16-chip mesh -------------
+    big = moe_dag(64, 254, seed=0)                    # 16384 nodes
+    hm = HierarchicalMesh(4, 4, 32, 32)               # 128x128 = 16384 cores
+    recorder = Recorder()
+    t0 = time.perf_counter()
+    big_p = multilevel_placement(big, hm, coarsen_to=64,
+                                 refine_iters=1 if smoke else 2,
+                                 seed=0, iters=2000, recorder=recorder)
+    big_wall = time.perf_counter() - t0
+    valid = bool(np.unique(big_p).size == big.n
+                 and big_p.min() >= 0 and big_p.max() < hm.n_cores)
+    big_cost = grid_comm_cost(big, hm, big_p)
+    n_levels = sum(1 for e in recorder.events if e.get("name") == "ml.level")
+    record["large"] = {
+        "n_nodes": big.n, "n_cores": hm.n_cores, "n_chips": hm.n_chips,
+        "completed": True, "valid": valid, "wall_s": big_wall,
+        "comm_cost": big_cost, "n_levels": n_levels,
+    }
+    rows_out.append((
+        "multilevel.16k", big_wall * 1e6,
+        f"n={big.n} cores={hm.n_cores} wall={big_wall:.1f}s "
+        f"levels={n_levels} cost={big_cost:.3e} valid={valid}"))
+
+    if not smoke:
+        from repro.core.graph import transformer_graph
+        tg = transformer_graph("qwen3-moe-30b-a3b", n_shards=4)
+        thm = HierarchicalMesh(2, 2, 41, 41)          # 6724 cores
+        t0 = time.perf_counter()
+        tp = multilevel_placement(tg, thm, coarsen_to=64, refine_iters=2,
+                                  seed=0, iters=2000)
+        t_wall = time.perf_counter() - t0
+        record["transformer"] = {
+            "config": "qwen3-moe-30b-a3b", "n_nodes": tg.n,
+            "n_cores": thm.n_cores, "wall_s": t_wall,
+            "comm_cost": grid_comm_cost(tg, thm, tp),
+            "valid": bool(np.unique(tp).size == tg.n),
+        }
+        rows_out.append((
+            "multilevel.transformer", t_wall * 1e6,
+            f"qwen3-moe n={tg.n} wall={t_wall:.1f}s "
+            f"cost={record['transformer']['comm_cost']:.3e} "
+            f"valid={record['transformer']['valid']}"))
+
+    # ---- identity bits ---------------------------------------------------
+    # coarsen_to >= n must delegate to the flat method bit-for-bit
+    sg = random_dag(24, seed=3)
+    snoc = GridTopology(6, 6)
+    flat = optimize_placement(sg, snoc, method="simulated_annealing", seed=5,
+                              iters=400)
+    via_ml = optimize_placement(sg, snoc, method="multilevel",
+                                coarsen_to=sg.n, seed=5, iters=400)
+    delegation = bool(np.array_equal(flat.placement, via_ml.placement))
+    record["identity"] = {"delegation_identical": delegation}
+
+    # recorder on/off must not change the V-cycle's result
+    pa = multilevel_placement(graph, noc, seed=0, recorder=recorder, **ML_KW)
+    identical = bool(np.array_equal(np.asarray(ml_p), pa))
+    record["recorder_identity"] = {"results_identical": identical}
+    record["counters"] = counter_record(recorder)
+    rows_out.append((
+        "multilevel.identity", 0.0,
+        f"delegation_identical={delegation} "
+        f"recorder_identical={identical} "
+        f"ml_levels={record['counters'].get('ml_levels', 0)}"))
+
+    out = write_record(record, json_path, smoke, "BENCH_multilevel.json")
+    if out:
+        rows_out.append(("multilevel.json", 0.0,
+                         f"wrote {os.path.relpath(out)}"))
+    tr = write_trace(recorder, "multilevel", json_path, smoke)
+    if tr:
+        rows_out.append(("multilevel.trace", 0.0,
+                         f"wrote {os.path.relpath(tr)}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the benchmark record to PATH")
+    args = ap.parse_args()
+    for name, us, derived in multilevel(smoke=args.smoke,
+                                        json_path=args.json):
+        print(f"{name},{us:.1f},{derived}")

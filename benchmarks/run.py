@@ -18,8 +18,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (copartition, deploy_e2e, device_search, fault_replace,
-                   multichip, noc_eval, paper_figs, ppo_pipeline, roofline,
-                   spike_kernel, tpu_placement)
+                   multichip, multilevel, noc_eval, paper_figs, ppo_pipeline,
+                   roofline, spike_kernel, tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -31,6 +31,7 @@ def main() -> None:
         ("ppo_pipeline", ppo_pipeline.ppo_pipeline),
         ("deploy_e2e", deploy_e2e.deploy_e2e),
         ("device_search", device_search.device_search),
+        ("multilevel", multilevel.multilevel),
         ("multichip", multichip.multichip),
         ("copartition", copartition.copartition),
         ("fault_replace", fault_replace.fault_replace),
@@ -45,9 +46,11 @@ def main() -> None:
     # x objective (multichip includes a PPO run on 64 cores); fault_replace
     # replays minute-scale scenario sweeps on the 64-core fabric (the nightly
     # job runs it as its own step, so --fast skipping it avoids a double run);
-    # device_search repeats full-budget searches for latency percentiles
+    # device_search repeats full-budget searches for latency percentiles;
+    # multilevel repeats a 200k-iteration flat SA reference and places a
+    # 16k-node graph (the nightly job runs the full sweep as its own step)
     fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip",
-                 "fault_replace", "device_search"}
+                 "fault_replace", "device_search", "multilevel"}
     print("name,us_per_call,derived")
     suites = []          # per-suite run records (the --json artifact)
     failed = []

@@ -213,10 +213,9 @@ class IncidentTables:
 
 def build_incident_tables(graph: LogicalGraph) -> IncidentTables:
     """Build the padded per-node incident-edge tables of ``graph``."""
-    src, dst = np.nonzero(graph.adj)
+    src, dst, vol = graph.edge_arrays()
     keep = src != dst                  # self-edges never move a comm cost
-    src, dst = src[keep], dst[keep]
-    vol = graph.adj[src, dst].astype(np.float64)
+    src, dst, vol = src[keep], dst[keep], vol[keep]
     n = graph.n
     nodes = np.concatenate([src, dst])
     others = np.concatenate([dst, src])
@@ -324,10 +323,8 @@ class BatchedNoC:
     # ---- inputs ------------------------------------------------------------
     def edge_arrays(self, graph: LogicalGraph):
         """(src, dst, vol, compute) in the same order as ``graph.edges``."""
-        src, dst = np.nonzero(graph.adj)
-        vol = graph.adj[src, dst].astype(np.float64)
-        return (src.astype(np.int64), dst.astype(np.int64), vol,
-                np.asarray(graph.compute, np.float64))
+        src, dst, vol = graph.edge_arrays()
+        return (src, dst, vol, np.asarray(graph.compute, np.float64))
 
     def _placements(self, placements, n_nodes: int, validate: bool):
         if validate:

@@ -7,3 +7,7 @@ from .population import (genetic_population,  # noqa: F401
                          simulated_annealing_population)
 from .device_search import (genetic_device,  # noqa: F401
                             simulated_annealing_device)
+from .multilevel import (CoarseningLevel, coarsen, coarsen_once,  # noqa: F401
+                         grid_comm_cost, heavy_edge_matching,
+                         multilevel_placement, project_placement,
+                         refine_placement)

@@ -37,7 +37,7 @@ import numpy as np
 
 from ...deploy.objective import as_objective
 from ...obs import maybe_span
-from . import baselines, device_search, population
+from . import baselines, device_search, multilevel, population
 from .policy_baseline import PolicyConfig, run_policy_baseline
 from .ppo import PPOConfig, run_ppo
 
@@ -72,11 +72,12 @@ class PlacementResult:
 
 METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
            "greedy", "policy", "ppo", "genetic",
-           "population_random_search", "population_simulated_annealing")
+           "population_random_search", "population_simulated_annealing",
+           "multilevel")
 
 # short spellings accepted by optimize_placement (paper/CLI shorthand)
 METHOD_ALIASES = {"sa": "simulated_annealing", "ga": "genetic",
-                  "rs": "random_search"}
+                  "rs": "random_search", "ml": "multilevel"}
 
 
 def _chip_seed(graph, noc):
@@ -118,7 +119,8 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     method = METHOD_ALIASES.get(method, method)
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
-    if bk == "device" and method not in ("simulated_annealing", "genetic"):
+    if bk == "device" and method not in ("simulated_annealing", "genetic",
+                                         "multilevel"):
         raise ValueError(
             f"backend='device' implements simulated_annealing (sa) and "
             f"genetic (ga) only, not {method!r}")
@@ -188,6 +190,13 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                 placement = population.genetic_population(
                     graph, noc, generations=gens, seed=seed, backend=bk,
                     objective=ob, recorder=recorder, **kw)
+        elif method == "multilevel":
+            # coarsen -> coarse search -> refine; passes the *original*
+            # backend/objective (possibly None) through so its
+            # coarsen_to >= n delegation replays the flat call bit-for-bit
+            placement = multilevel.multilevel_placement(
+                graph, noc, seed=seed, budget=budget, backend=backend,
+                objective=objective, recorder=recorder, **kw)
         elif method == "greedy":
             placement = baselines.greedy(graph, noc)
         elif method == "policy":

@@ -253,7 +253,7 @@ class Topology:
         comm_cost = 0.0
         total_bytes = 0.0
         max_path_lat = 0.0
-        for i, j, vol in graph.edges:
+        for i, j, vol in zip(*graph.edge_arrays()):
             ids = np.asarray(self.route_ids(int(placement[i]),
                                             int(placement[j])), dtype=np.int64)
             h = len(ids)
@@ -487,7 +487,7 @@ class GridTopology(Topology):
         comm_cost = 0.0
         weighted_hops = 0.0
         total_bytes = 0.0
-        for i, j, vol in graph.edges:
+        for i, j, vol in zip(*graph.edge_arrays()):
             src, dst = placement[i], placement[j]
             links = self.route(src, dst)
             h = len(links)

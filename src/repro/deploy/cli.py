@@ -134,6 +134,34 @@ def _restarts_kw(ap, args) -> dict:
     return {"restarts": args.restarts}
 
 
+def _multilevel_args(ap):
+    ap.add_argument("--coarsen-to", type=int, default=None, metavar="N",
+                    help="multilevel only: coarsen the logical graph to <= N "
+                         "nodes before the flat search (default 64)")
+    ap.add_argument("--refine-iters", type=int, default=None, metavar="K",
+                    help="multilevel only: K * n_level greedy swap proposals "
+                         "per uncoarsened level (default 3)")
+    ap.add_argument("--coarse-method", default=None, metavar="M",
+                    help="multilevel only: flat method for the coarsest "
+                         "level (default simulated_annealing)")
+
+
+def _multilevel_kw(ap, args, methods) -> dict:
+    """``--coarsen-to/--refine-iters/--coarse-method`` as optimize_placement
+    kwargs (method multilevel/ml only — flat searches have no V-cycle)."""
+    kw = {}
+    if args.coarsen_to is not None:
+        kw["coarsen_to"] = args.coarsen_to
+    if args.refine_iters is not None:
+        kw["refine_iters"] = args.refine_iters
+    if args.coarse_method is not None:
+        kw["coarse_method"] = args.coarse_method
+    if kw and not any(m in ("multilevel", "ml") for m in methods):
+        ap.error("--coarsen-to/--refine-iters/--coarse-method require "
+                 "--method multilevel")
+    return kw
+
+
 def _write_traces(recorder, trace, chrome_trace):
     for path, writer in ((trace, recorder.write_jsonl),
                          (chrome_trace, recorder.write_chrome_trace)):
@@ -168,6 +196,7 @@ def report_main(argv=None) -> int:
                          "reference, or device for the one-dispatch SA/GA)")
     ap.add_argument("--restarts", type=int, default=None, metavar="N",
                     help="parallel SA restart chains (backend=device only)")
+    _multilevel_args(ap)
     ap.add_argument("--top-k", type=int, default=10,
                     help="hotspot links to list")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -186,7 +215,8 @@ def report_main(argv=None) -> int:
                         method=args.method, objective=args.objective,
                         schedule="none", seed=args.seed, budget=args.budget,
                         backend=args.backend, recorder=recorder,
-                        **_restarts_kw(ap, args))
+                        **_restarts_kw(ap, args),
+                        **_multilevel_kw(ap, args, [args.method]))
     rep = flow_report(noc, plan.graph, plan.placement, top_k=args.top_k)
     d = noc.describe()
     topo = f"{d.get('kind', 'grid')} {d.get('rows')}x{d.get('cols')}" \
@@ -372,6 +402,7 @@ def main(argv=None) -> int:
                          "of simulated_annealing/genetic)")
     ap.add_argument("--restarts", type=int, default=None, metavar="N",
                     help="parallel SA restart chains (backend=device only)")
+    _multilevel_args(ap)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write full DeploymentPlan reports to PATH")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -401,11 +432,13 @@ def main(argv=None) -> int:
             ap.error(f"unknown model {model_name!r}; choose from {tuple(MODELS)}")
     if args.backend == "device":         # device runs sa/ga only — fail early
         bad = [m for m in methods
-               if m not in ("sa", "ga", "simulated_annealing", "genetic")]
+               if m not in ("sa", "ga", "simulated_annealing", "genetic",
+                            "ml", "multilevel")]
         if bad:
             ap.error(f"--backend device implements sa/ga only; drop {bad} "
                      "from --methods (default smoke/sweep lists include "
                      "constructors)")
+    ml_kw = _multilevel_kw(ap, args, methods)
 
     # one recorder across the whole sweep: deployments show up as consecutive
     # span groups, counters accumulate sweep-wide
@@ -422,7 +455,8 @@ def main(argv=None) -> int:
                     seed=args.seed, budget=budget, backend=args.backend,
                     contention_feedback=args.contention_feedback,
                     copartition_iters=args.copartition_iters,
-                    recorder=recorder, **_restarts_kw(ap, args))
+                    recorder=recorder, **_restarts_kw(ap, args),
+                    **(ml_kw if method in ("ml", "multilevel") else {}))
                 reports.append(plan.report())
                 print(_csv(_row(plan)))
 

@@ -143,7 +143,7 @@ def _measured_cut_weights(part, graph, placement, noc) -> np.ndarray:
     predicted = np.zeros(n_units)
     unit = np.array([s.layer for s in part.slices])
     cut = graph.chip_cut_mask()
-    for i, j, vol in graph.edges:
+    for i, j, vol in zip(*graph.edge_arrays()):
         ids = np.asarray(noc.route_ids(int(placement[i]), int(placement[j])),
                          dtype=np.int64)
         measured[unit[i]] += vol * float(mask[ids].sum()) if ids.size else 0.0

@@ -237,23 +237,22 @@ def drift_graph(graph: LogicalGraph, drift, t: int,
     if callable(drift):
         return drift(graph, t)
     kind, amp, param = drift
-    edges = graph.edges
-    if not edges:
+    src, dst, _ = graph.edge_arrays()       # row-major, same order as .edges
+    if not src.size:
         return graph
     if kind == "diurnal":
-        phase = np.random.default_rng(seed).random(len(edges))
+        phase = np.random.default_rng(seed).random(src.size)
         factors = 1.0 + amp * np.sin(
             2.0 * np.pi * (t / max(param, 1e-9) + phase))
     elif kind == "bursty":
         rng = np.random.default_rng((seed + 1) * 1_000_003 + t)
-        factors = np.where(rng.random(len(edges)) < param, 1.0 + amp, 1.0)
+        factors = np.where(rng.random(src.size) < param, 1.0 + amp, 1.0)
     else:
         raise ValueError(f"unknown drift kind {kind!r}; "
                          f"choose from {DRIFT_KINDS}")
     factors = np.maximum(factors, 0.05)
     adj = np.array(graph.adj, dtype=np.float64)
-    for (i, j, _), f in zip(edges, factors):
-        adj[i, j] *= f
+    adj[src, dst] *= factors
     return LogicalGraph(adj, graph.compute, graph.memory,
                         names=graph.names, chip_of=graph.chip_of)
 

@@ -106,8 +106,20 @@ class FlowReport:
         """ASCII per-core routed-traffic map (rows × cols grid)."""
         return ascii_heatmap(self.core_traffic, width=width)
 
-    def render(self, top_k: int = 10) -> str:
-        """Human-readable report (what ``repro-deploy report`` prints)."""
+    # Heatmap ceiling for render(): above this many cores the per-core glyph
+    # map (O(cells) string) is unreadable and slow to build, so render()
+    # switches to a top-k hottest-core summary. 4096 = a 64x64 chip; every
+    # historical (<= pod-scale) topology renders identically.
+    MAX_HEATMAP_CELLS = 4096
+
+    def render(self, top_k: int = 10,
+               max_heatmap_cells: int | None = None) -> str:
+        """Human-readable report (what ``repro-deploy report`` prints).
+
+        On topologies above ``max_heatmap_cells`` cores (default
+        :data:`MAX_HEATMAP_CELLS`) the ASCII heatmap is replaced by the
+        ``top_k`` hottest cores plus distribution stats, so the report stays
+        terminal-sized on pod-scale meshes."""
         t = self.topology
         lines = [
             f"flow report: {t.get('kind', '?')} "
@@ -128,10 +140,28 @@ class FlowReport:
         for entry in self.top_links[:top_k]:
             ic = "  [interchip]" if entry["interchip"] else ""
             lines.append(f"    {entry['link']}: {entry['bytes']:.4e}{ic}")
-        lines.append("  per-core traffic heatmap "
-                     f"(max={float(self.core_traffic.max()):.3e}):")
-        for row in self.heatmap().splitlines():
-            lines.append("    " + row)
+        cap = (self.MAX_HEATMAP_CELLS if max_heatmap_cells is None
+               else max_heatmap_cells)
+        ct = np.asarray(self.core_traffic, dtype=np.float64)
+        if ct.size <= cap:
+            lines.append("  per-core traffic heatmap "
+                         f"(max={float(ct.max()):.3e}):")
+            for row in self.heatmap().splitlines():
+                lines.append("    " + row)
+        else:
+            flat = ct.ravel()
+            order = np.argsort(flat, kind="stable")[::-1]
+            k = min(top_k, int((flat > 0).sum()))
+            lines.append(f"  per-core traffic: {ct.size} cores (heatmap "
+                         f"suppressed above {cap}); top {k} cores:")
+            cols = ct.shape[1]
+            for core in order[:k]:
+                r, c = divmod(int(core), cols)
+                lines.append(f"    core ({r},{c}): {flat[core]:.4e}")
+            active = flat[flat > 0]
+            mean = float(active.mean()) if active.size else 0.0
+            lines.append(f"    active cores {active.size}, "
+                         f"mean {mean:.4e}, max {float(ct.max()):.4e}")
         return "\n".join(lines)
 
 
@@ -172,16 +202,20 @@ def flow_report(noc, graph, placement, top_k: int = 10) -> FlowReport:
             "interchip": bool(ic_mask is not None and ic_mask[lid]),
         })
 
+    # vectorized per-chip / inter-chip totals: np.bincount accumulates in
+    # ascending link-id order, the same addition sequence as the historical
+    # per-link Python loop, so the floats are bit-identical
+    active_ids = np.nonzero(loads)[0]
+    ic = (ic_mask[active_ids] if ic_mask is not None
+          else np.zeros(active_ids.size, dtype=bool))
+    interchip_total = float(loads[active_ids[ic]].sum())
+    intra = active_ids[~ic]
     per_chip: dict = {}
-    interchip_total = 0.0
-    for lid in np.nonzero(loads)[0]:
-        if ic_mask is not None and ic_mask[lid]:
-            interchip_total += float(loads[lid])
-        else:
-            chip = int(chip_of[src[lid]])
-            per_chip[chip] = per_chip.get(chip, 0.0) + float(loads[lid])
+    if intra.size:
+        sums = np.bincount(chip_of[src[intra]], weights=loads[intra])
+        per_chip = {int(c): float(sums[c]) for c in np.nonzero(sums)[0]}
 
-    edges_total = float(sum(vol for _, _, vol in graph.edges))
+    edges_total = float(graph.edge_arrays()[2].sum())
     return FlowReport(
         topology=noc.describe(),
         n_links=int(loads.size),

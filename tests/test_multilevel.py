@@ -1,0 +1,314 @@
+"""Multilevel placement invariants (repro.core.placement.multilevel).
+
+Deterministic seeded sweeps run unconditionally; hypothesis property tests
+ride along when the dev extra is installed. The invariants pinned here are
+the ones the V-cycle's correctness rests on: matchings never double-book a
+node, coarsening conserves off-diagonal traffic minus the internalized
+volume, every level's projection is a valid (injective, in-range) placement,
+and ``coarsen_to >= n`` is bit-identical to the flat method it delegates to.
+"""
+import numpy as np
+import pytest
+
+from repro.core import LogicalGraph, random_dag
+from repro.core.graph import layered_dag, moe_dag
+from repro.core.placement import multilevel as ml
+from repro.core.placement import optimize_placement
+from repro.core.topology import DegradedTopology, GridTopology, HierarchicalMesh
+from repro.obs import Recorder
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYP = True
+except ImportError:
+    HAS_HYP = False
+
+
+def _graphs(seed):
+    return [random_dag(24, seed=seed), layered_dag(4, 8, seed=seed),
+            moe_dag(2, 6, top_k=2, seed=seed)]
+
+
+# ---------------------------------------------------------------------------
+# coarsening invariants
+# ---------------------------------------------------------------------------
+
+def _check_matching(g, match):
+    # each node matched at most once, matches symmetric, never to self
+    matched = np.nonzero(match >= 0)[0]
+    assert np.array_equal(np.sort(match[matched]),
+                          np.sort(matched))                 # a permutation...
+    assert np.all(match[match[matched]] == matched)         # ...that is an
+    assert np.all(match[matched] != matched)                # involution
+
+
+def _check_conservation(g, lvl):
+    src, dst, vol = g.edge_arrays()
+    off_diag = vol[src != dst].sum()
+    internal = vol[(src != dst)
+                   & (lvl.node_map[src] == lvl.node_map[dst])].sum()
+    coarse_total = lvl.graph.adj.sum() - np.trace(lvl.graph.adj)
+    assert coarse_total == pytest.approx(off_diag - internal, rel=1e-12)
+    # merged node weights conserved exactly-ish too
+    assert lvl.graph.compute.sum() == pytest.approx(g.compute.sum())
+    assert lvl.graph.memory.sum() == pytest.approx(g.memory.sum())
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_matching_and_conservation(seed):
+    for g in _graphs(seed):
+        match = ml.heavy_edge_matching(g)
+        _check_matching(g, match)
+        lvl = ml.coarsen_once(g)
+        if lvl is None:
+            continue
+        assert lvl.graph.n < g.n
+        assert lvl.node_map.shape == (g.n,)
+        assert lvl.node_map.max() == lvl.graph.n - 1
+        _check_conservation(g, lvl)
+
+
+def test_coarsen_hierarchy_monotone():
+    g = layered_dag(8, 16, seed=0)
+    levels = ml.coarsen(g, coarsen_to=8)
+    assert levels, "128-node layered DAG must coarsen"
+    sizes = [g.n] + [lv.graph.n for lv in levels]
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+    # conservation holds at every level, not just the first
+    cur = g
+    for lv in levels:
+        _check_conservation(cur, lv)
+        cur = lv.graph
+
+
+def test_coarsen_to_at_least_n_is_empty():
+    g = random_dag(16, seed=0)
+    assert ml.coarsen(g, coarsen_to=16) == []
+    assert ml.coarsen(g, coarsen_to=99) == []
+
+
+# ---------------------------------------------------------------------------
+# region mapping / projection
+# ---------------------------------------------------------------------------
+
+def test_grid_sequence_halves_to_unit():
+    grids = ml._grid_sequence(6, 9)
+    assert grids[0] == (6, 9) and grids[-1] == (1, 1)
+    areas = [r * c for r, c in grids]
+    assert all(a > b for a, b in zip(areas, areas[1:]))
+    # picking: smallest grid that still fits
+    assert ml._pick_grid(grids, 54) == (6, 9)
+    assert ml._pick_grid(grids, 1) == (1, 1)
+    for n in (2, 5, 11, 28):
+        gr, gc = ml._pick_grid(grids, n)
+        assert gr * gc >= n
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_projection_always_valid(seed):
+    rng = np.random.default_rng(seed)
+    R, C = 8, 8
+    grids = ml._grid_sequence(R, C)
+    for n_coarse, n_fine in ((3, 7), (8, 16), (16, 16), (30, 60), (32, 64)):
+        pg = ml._pick_grid(grids, n_coarse)
+        cg = ml._pick_grid(grids, n_fine)
+        parent = rng.permutation(pg[0] * pg[1])[:n_coarse]
+        node_map = rng.integers(0, n_coarse, size=n_fine)
+        node_map[:n_coarse] = np.arange(n_coarse)   # surjective like coarsen
+        child = ml.project_placement(parent, node_map, pg, cg, (R, C))
+        assert child.shape == (n_fine,)
+        assert child.min() >= 0 and child.max() < cg[0] * cg[1]
+        assert np.unique(child).size == n_fine      # injective
+
+
+def test_projection_overfull_raises():
+    with pytest.raises(ValueError):
+        ml.project_placement(np.array([0, 1]), np.zeros(5, dtype=np.int64),
+                             (2, 2), (2, 2), (4, 4))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end V-cycle
+# ---------------------------------------------------------------------------
+
+def test_multilevel_valid_and_costed():
+    g = layered_dag(8, 16, seed=1)
+    noc = GridTopology(12, 12)
+    p = ml.multilevel_placement(g, noc, coarsen_to=16, refine_iters=2,
+                                seed=0, iters=300)
+    assert p.shape == (g.n,)
+    assert np.unique(p).size == g.n
+    assert p.min() >= 0 and p.max() < noc.n_cores
+    # the vectorized cost equals the reference evaluator on XY grids
+    assert ml.grid_comm_cost(g, noc, p) == \
+        pytest.approx(noc.evaluate(g, p).comm_cost, rel=1e-9)
+
+
+def test_multilevel_torus_hops_match_reference():
+    g = random_dag(20, seed=3)
+    noc = GridTopology(6, 6, torus=True)
+    p = ml.multilevel_placement(g, noc, coarsen_to=8, seed=1, iters=200)
+    assert np.unique(p).size == g.n
+    assert ml.grid_comm_cost(g, noc, p) == \
+        pytest.approx(noc.evaluate(g, p).comm_cost, rel=1e-9)
+
+
+@pytest.mark.parametrize("method", ["simulated_annealing", "genetic"])
+def test_identity_when_no_coarsening(method):
+    """coarsen_to >= n delegates to the flat method bit-for-bit."""
+    g = random_dag(18, seed=5)
+    noc = GridTopology(5, 5)
+    kw = {"iters": 200} if method == "simulated_annealing" else \
+         {"pop_size": 8, "generations": 4}
+    flat = optimize_placement(g, noc, method=method, seed=7, **kw)
+    mlr = optimize_placement(g, noc, method="multilevel", coarsen_to=g.n,
+                             coarse_method=method, seed=7, **kw)
+    assert np.array_equal(flat.placement, mlr.placement)
+    assert mlr.comm_cost == flat.comm_cost
+
+
+def test_alias_ml():
+    g = random_dag(12, seed=0)
+    noc = GridTopology(4, 4)
+    a = optimize_placement(g, noc, method="ml", coarsen_to=4, seed=0,
+                           iters=100)
+    b = optimize_placement(g, noc, method="multilevel", coarsen_to=4, seed=0,
+                           iters=100)
+    assert np.array_equal(a.placement, b.placement)
+
+
+def test_recorder_identity_and_level_events():
+    g = layered_dag(5, 10, seed=2)
+    noc = GridTopology(8, 8)
+    p_off = ml.multilevel_placement(g, noc, coarsen_to=12, seed=4, iters=150)
+    rec = Recorder()
+    p_on = ml.multilevel_placement(g, noc, coarsen_to=12, seed=4, iters=150,
+                                   recorder=rec)
+    assert np.array_equal(p_off, p_on)          # bit-identical recorder on/off
+    events = [e["attrs"] for e in rec.events if e.get("name") == "ml.level"]
+    assert len(events) >= 2                     # coarsest + >=1 refined level
+    levels = [e["level"] for e in events]
+    assert levels == sorted(levels, reverse=True)
+    assert levels[-1] == 0                      # walks back to the fine graph
+    for e in events:
+        assert e["n_nodes"] <= e["n_regions"]
+        assert 0 < e["coarsen_ratio"] <= 1.0
+        assert e["wall_s"] >= 0.0
+    assert all(e["refine_gain"] >= 0.0 for e in events[1:])
+
+
+def test_multilevel_chip_seeded_hier():
+    hm = HierarchicalMesh(2, 2, 5, 5)
+    g = layered_dag(6, 12, seed=3)
+    chip = (np.arange(g.n) * hm.n_chips) // g.n
+    g = LogicalGraph(g.adj, g.compute, g.memory, chip_of=chip)
+    p = ml.multilevel_placement(g, hm, coarsen_to=16, seed=0, iters=200)
+    assert np.unique(p).size == g.n
+    assert ml.grid_comm_cost(g, hm, p) == \
+        pytest.approx(hm.evaluate(g, p).comm_cost, rel=1e-9)
+
+
+def test_degraded_topology_rejected():
+    base = GridTopology(6, 6)
+    degraded = DegradedTopology(base, dropped_nodes=(7,))
+    g = random_dag(20, seed=1)
+    with pytest.raises(ValueError, match="intact"):
+        ml.multilevel_placement(g, degraded, coarsen_to=8)
+    # ... but the identity path still delegates (flat SA handles faults)
+    p = ml.multilevel_placement(g, degraded, coarsen_to=g.n, seed=0,
+                                iters=100)
+    assert np.unique(p).size == g.n
+
+
+def test_non_comm_objective_rejected():
+    g = random_dag(16, seed=0)
+    noc = GridTopology(5, 5)
+    with pytest.raises(ValueError, match="comm_cost"):
+        ml.multilevel_placement(g, noc, coarsen_to=4, objective="max_link")
+
+
+def test_graph_larger_than_noc_raises():
+    g = random_dag(30, seed=0)
+    with pytest.raises(ValueError):
+        ml.multilevel_placement(g, GridTopology(5, 5), coarsen_to=8)
+
+
+# ---------------------------------------------------------------------------
+# satellites: edge_arrays parity, large-graph generators, flow render cap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_edge_arrays_matches_edges(seed):
+    for g in _graphs(seed):
+        src, dst, vol = g.edge_arrays()
+        assert src.size == dst.size == vol.size
+        pairs = list(zip(src.tolist(), dst.tolist(), vol.tolist()))
+        assert pairs == [(i, j, v) for i, j, v in g.edges]
+        assert vol.sum() == pytest.approx(g.adj.sum())
+
+
+def test_generators_shapes_and_acyclicity():
+    g = layered_dag(4, 8, seed=0)
+    assert g.n == 32
+    m = moe_dag(3, 6, top_k=2, seed=0)
+    assert m.n == 3 * (6 + 2)
+    for dag in (g, m):
+        src, dst, _ = dag.edge_arrays()
+        assert np.all(src < dst), "generators must emit topologically " \
+                                  "ordered DAGs (src < dst)"
+        assert np.all(dag.compute > 0) and np.all(dag.memory > 0)
+
+
+def test_moe_dag_16k_instance_size():
+    # the benchmark headline instance: exactly 16384 nodes, without building it
+    n_blocks, n_experts = 64, 254
+    assert n_blocks * (n_experts + 2) == 16384
+
+
+def test_flow_render_caps_heatmap():
+    from repro.obs import flow_report
+    g = random_dag(12, seed=0)
+    noc = GridTopology(4, 4)
+    p = np.arange(g.n)
+    rep = flow_report(noc, g, p)
+    full = rep.render()
+    assert "heatmap" in full and "suppressed" not in full
+    capped = rep.render(top_k=3, max_heatmap_cells=8)
+    assert "suppressed" in capped
+    assert "top 3 cores" in capped
+    assert len(capped) < len(full) or noc.n_cores <= 8
+
+
+if HAS_HYP:
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(6, 40), seed=st.integers(0, 1000))
+    def test_hyp_matching_and_conservation(n, seed):
+        g = random_dag(n, seed=seed)
+        match = ml.heavy_edge_matching(g)
+        _check_matching(g, match)
+        lvl = ml.coarsen_once(g)
+        if lvl is not None:
+            _check_conservation(g, lvl)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(4, 30), seed=st.integers(0, 1000),
+           coarsen_to=st.integers(2, 12))
+    def test_hyp_vcycle_projects_valid_fine_placement(n, seed, coarsen_to):
+        g = random_dag(n, seed=seed)
+        noc = GridTopology(6, 6)
+        p = ml.multilevel_placement(g, noc, coarsen_to=coarsen_to,
+                                    refine_iters=1, seed=seed, iters=60)
+        assert p.shape == (n,)
+        assert np.unique(p).size == n
+        assert p.min() >= 0 and p.max() < noc.n_cores
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_hyp_identity_delegation(seed):
+        g = random_dag(14, seed=seed)
+        noc = GridTopology(4, 4)
+        flat = optimize_placement(g, noc, method="simulated_annealing",
+                                  seed=seed, iters=80)
+        mlr = optimize_placement(g, noc, method="multilevel",
+                                 coarsen_to=g.n + 5, seed=seed, iters=80)
+        assert np.array_equal(flat.placement, mlr.placement)
