@@ -204,6 +204,36 @@ SUITES = {
         Metric("grids.0.cases.3.interchip_bytes", rtol=DET),   # chip+copart
         Metric("counters.noc_batch_evals", rtol=DET),
     ],
+    "service": [
+        # serving-layer acceptance bits: cached answers must clear the 50x
+        # speedup floor over the cold p50, warm near-misses must land within
+        # the cost band at under half the cold wall, fused batch rows must
+        # be bit-identical to their solo cold searches, and a reloaded cache
+        # must still hit. Raw latency percentiles are recorded, never gated —
+        # except the hit p50's generous absolute ceiling (a hit is a hash +
+        # dict lookup; 50 ms of slack is orders of magnitude).
+        Metric("hit.all_hits", expect=True),
+        Metric("hit.matches_cold", expect=True),
+        Metric("hit.speedup_ok", expect=True),
+        Metric("hit.p50_s", max_abs=0.05),
+        Metric("warm.status_warm", expect=True),
+        Metric("warm.cost_ok", expect=True),
+        Metric("warm.time_ok", expect=True),
+        Metric("fused.results_match", expect=True),
+        Metric("persistence.hit_after_reload", expect=True),
+        # the seeded SA searches behind the service are numpy-deterministic
+        Metric("cold.objective_cost", rtol=DET),
+        Metric("warm.objective_cost", rtol=DET),
+        Metric("warm.attempts", rtol=DET),
+        Metric("fused.costs.0", rtol=DET),
+        Metric("fused.costs.3", rtol=DET),
+        # deterministic service work counters (hits/misses/warm/fused rows)
+        Metric("counters.service_requests", rtol=DET),
+        Metric("counters.service_hits", rtol=DET),
+        Metric("counters.service_misses", rtol=DET),
+        Metric("counters.service_warm_starts", rtol=DET),
+        Metric("counters.service_fused_rows", rtol=DET),
+    ],
     "fault_replace": [
         # the online re-placement loop is fully deterministic (seeded SA on
         # the batch backend, analytic drift): gate the recovery outcomes,
@@ -228,7 +258,7 @@ SUITES = {
 def _run_suite(name: str, json_path: str) -> None:
     """Run one suite's smoke mode in-process, record written to json_path."""
     from . import (copartition, deploy_e2e, device_search, fault_replace,
-                   multichip, multilevel, noc_eval, ppo_pipeline)
+                   multichip, multilevel, noc_eval, ppo_pipeline, service)
     fn = {"noc_eval": noc_eval.noc_eval,
           "ppo_pipeline": ppo_pipeline.ppo_pipeline,
           "deploy_e2e": deploy_e2e.deploy_e2e,
@@ -236,7 +266,8 @@ def _run_suite(name: str, json_path: str) -> None:
           "multilevel": multilevel.multilevel,
           "multichip": multichip.multichip,
           "copartition": copartition.copartition,
-          "fault_replace": fault_replace.fault_replace}[name]
+          "fault_replace": fault_replace.fault_replace,
+          "service": service.service}[name]
     for row in fn(smoke=True, json_path=json_path):
         print(f"  {row[0]},{row[1]:.1f},{row[2]}")
 

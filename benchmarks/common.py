@@ -63,6 +63,23 @@ def placement_suite(graph, noc, methods=("zigzag", "sigmate", "random_search",
     return rows
 
 
+def _json_default(o):
+    """Numpy scalars leak into benchmark records through comparisons on
+    array-backed costs (``np.float64 <= np.float64`` -> ``np.bool_``);
+    stdlib json rejects them, so coerce any numpy scalar to its Python
+    equivalent instead of crashing the suite at write time."""
+    if isinstance(o, np.bool_):
+        return bool(o)
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"Object of type {type(o).__name__} "
+                    f"is not JSON serializable")
+
+
 def write_record(record, json_path, smoke: bool, default_name: str):
     """Write a benchmark's JSON record under the shared output protocol:
     an explicit ``json_path`` always wins (the regression gate's fresh-smoke
@@ -76,7 +93,7 @@ def write_record(record, json_path, smoke: bool, default_name: str):
         return None
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
-        json.dump(record, f, indent=2)
+        json.dump(record, f, indent=2, default=_json_default)
     return out
 
 

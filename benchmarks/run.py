@@ -19,7 +19,7 @@ def main() -> None:
 
     from . import (copartition, deploy_e2e, device_search, fault_replace,
                    multichip, multilevel, noc_eval, paper_figs, ppo_pipeline,
-                   roofline, spike_kernel, tpu_placement)
+                   roofline, service, spike_kernel, tpu_placement)
 
     benches = [
         ("table1", paper_figs.table1_eer),
@@ -35,6 +35,7 @@ def main() -> None:
         ("multichip", multichip.multichip),
         ("copartition", copartition.copartition),
         ("fault_replace", fault_replace.fault_replace),
+        ("service", service.service),
         ("fig6", paper_figs.fig6_placement_32),
         ("fig7_11", paper_figs.hotspots),
         ("fig10", paper_figs.fig10_vs_policy),
@@ -48,9 +49,11 @@ def main() -> None:
     # job runs it as its own step, so --fast skipping it avoids a double run);
     # device_search repeats full-budget searches for latency percentiles;
     # multilevel repeats a 200k-iteration flat SA reference and places a
-    # 16k-node graph (the nightly job runs the full sweep as its own step)
+    # 16k-node graph (the nightly job runs the full sweep as its own step);
+    # service repeats dozens of full-budget cold deployments for the cold /
+    # warm / fused latency percentiles (nightly runs its full sweep too)
     fast_skip = {"fig8", "noc_eval", "ppo_pipeline", "deploy_e2e", "multichip",
-                 "fault_replace", "device_search", "multilevel"}
+                 "fault_replace", "device_search", "multilevel", "service"}
     print("name,us_per_call,derived")
     suites = []          # per-suite run records (the --json artifact)
     failed = []

@@ -32,6 +32,7 @@ changes.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 
 import numpy as np
 
@@ -79,6 +80,74 @@ METHODS = ("zigzag", "sigmate", "random_search", "simulated_annealing",
 METHOD_ALIASES = {"sa": "simulated_annealing", "ga": "genetic",
                   "rs": "random_search", "ml": "multilevel"}
 
+# arguments optimize_placement supplies itself — never forwardable via **kw
+_DRIVER_PARAMS = frozenset({"graph", "noc", "seed", "backend", "objective",
+                            "recorder", "budget", "generations", "iters"})
+
+
+def _fn_kwargs(fn) -> frozenset:
+    """Tunable kwargs a search function accepts, minus the driver-owned ones."""
+    return frozenset(inspect.signature(fn).parameters) - _DRIVER_PARAMS
+
+
+def method_kwargs(method: str, backend: str | None = None,
+                  coarse_method: str | None = None) -> frozenset:
+    """The ``**method_kw`` names :func:`optimize_placement` accepts for
+    ``method`` (alias-resolved) under ``backend``.
+
+    ``iters``/``generations`` are always accepted (they alias ``budget``);
+    deterministic constructors take none; ``multilevel`` additionally accepts
+    everything its ``coarse_method`` does (pass the requested coarse method,
+    default ``simulated_annealing``).
+    """
+    method = METHOD_ALIASES.get(method, method)
+    budgets = frozenset({"iters", "generations"})
+    if method in ("zigzag", "sigmate", "greedy"):
+        return frozenset()
+    if method == "random_search":
+        return _fn_kwargs(baselines.random_search) | budgets
+    if method == "simulated_annealing":
+        fn = (device_search.simulated_annealing_device
+              if backend == "device" else baselines.simulated_annealing)
+        return _fn_kwargs(fn) | budgets
+    if method == "population_random_search":
+        return _fn_kwargs(population.random_search_population) | budgets
+    if method == "population_simulated_annealing":
+        return _fn_kwargs(population.simulated_annealing_population) | budgets
+    if method == "genetic":
+        fn = (device_search.genetic_device if backend == "device"
+              else population.genetic_population)
+        return _fn_kwargs(fn) | budgets
+    if method == "multilevel":
+        own = frozenset({"coarsen_to", "refine_iters", "coarse_method"})
+        coarse = METHOD_ALIASES.get(coarse_method or "simulated_annealing",
+                                    coarse_method or "simulated_annealing")
+        if coarse == "multilevel":        # no recursive coarsening
+            return own | budgets
+        return own | method_kwargs(coarse, backend=backend) | budgets
+    if method in ("ppo", "policy"):
+        cfg_cls = PPOConfig if method == "ppo" else PolicyConfig
+        fields = frozenset(f.name for f in dataclasses.fields(cfg_cls))
+        return (fields - frozenset({"iterations", "seed", "backend",
+                                    "objective"})) | frozenset({"cfg", "init"})
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def validate_method_kw(method: str, kw: dict,
+                       backend: str | None = None) -> None:
+    """Raise ``TypeError`` listing the accepted kwargs when ``kw`` contains
+    names ``method`` does not take (typo'd ``**method_kw`` used to be
+    silently swallowed by the searches' own ``**kw`` sinks)."""
+    allowed = method_kwargs(method, backend=backend,
+                            coarse_method=kw.get("coarse_method"))
+    unknown = sorted(set(kw) - allowed)
+    if unknown:
+        method = METHOD_ALIASES.get(method, method)
+        accepted = ", ".join(sorted(allowed)) or "none"
+        raise TypeError(
+            f"unknown method kwarg(s) {unknown} for placement method "
+            f"{method!r} (backend={backend!r}); accepted: {accepted}")
+
 
 def _chip_seed(graph, noc):
     """Chip-respecting initialization when the partition was chip-aware and
@@ -117,6 +186,7 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
     """
     history = None
     method = METHOD_ALIASES.get(method, method)
+    validate_method_kw(method, kw, backend=backend)
     bk = backend or "batch"
     ob = objective if objective is not None else "comm_cost"
     if bk == "device" and method not in ("simulated_annealing", "genetic",
@@ -205,6 +275,7 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                 cfg = PolicyConfig(iterations=budget or 40, seed=seed,
                                    backend=bk, objective=ob, **kw)
             else:
+                _reject_cfg_extras("policy", cfg, kw)
                 cfg = _override_cfg(cfg, backend, objective)
             out = run_policy_baseline(graph, noc, cfg, recorder=recorder)
             placement, history = out["best_placement"], out["history"]
@@ -215,6 +286,7 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
                 cfg = PPOConfig(iterations=budget or 40, seed=seed,
                                 backend=bk, objective=ob, **kw)
             else:
+                _reject_cfg_extras("ppo", cfg, kw)
                 cfg = _override_cfg(cfg, backend, objective)
             st = run_ppo(graph, noc, cfg, recorder=recorder)
             placement, history = st.best_placement, st.history
@@ -242,6 +314,16 @@ def optimize_placement(graph, noc, method: str = "ppo", seed: int = 0,
         throughput=m.throughput, max_link=m.max_link,
         wall_time_s=sp.duration_s, history=history,
         objective=obj.name, objective_cost=obj.from_metrics(m, noc, placement))
+
+
+def _reject_cfg_extras(method, cfg, kw):
+    """A passed ``cfg`` carries the full search config — loose field kwargs
+    beside it used to be silently dropped; make that a TypeError."""
+    if kw:
+        raise TypeError(
+            f"method {method!r}: got both cfg={type(cfg).__name__} and loose "
+            f"config kwarg(s) {sorted(kw)}; fold them into the cfg "
+            "(dataclasses.replace) or drop the cfg")
 
 
 def _override_cfg(cfg, backend, objective):

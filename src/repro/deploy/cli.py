@@ -41,6 +41,19 @@ per-event recovery table, and before/after hotspot reports::
     PYTHONPATH=src python -m repro.deploy replay --topology hier:2x2:4x4 \\
         --scenario "steps=8;drift=diurnal:0.3:8;fault=link:8@2" \\
         --compare-cold --json results/replay.json
+
+``repro-deploy serve`` runs the persistent placement service
+(:mod:`repro.deploy.service`): plan caching keyed by canonical
+:class:`repro.deploy.request.DeployRequest` identity, near-miss warm starts,
+fused batched dispatch for concurrent same-graph requests. ``repro-deploy
+request`` is the client. ``report``/``replay`` accept ``--plan PATH|URL`` to
+reuse a served/cached plan instead of re-deploying::
+
+    PYTHONPATH=src python -m repro.deploy serve --port 8642 \\
+        --cache results/plan_cache.json
+    PYTHONPATH=src python -m repro.deploy request --url http://127.0.0.1:8642 \\
+        --method sa --budget 2000 --save plan.json
+    PYTHONPATH=src python -m repro.deploy report --plan plan.json
 """
 from __future__ import annotations
 
@@ -162,6 +175,33 @@ def _multilevel_kw(ap, args, methods) -> dict:
     return kw
 
 
+def _load_plan(ap, src):
+    """``--plan PATH|URL`` -> (DeployRequest, live DeploymentPlan).
+
+    Accepts a saved DeployResponse / cache-entry JSON (anything carrying
+    ``request`` + ``placement``) or a server URL returning one
+    (``http://host:port/plan/<cache_key>``). The plan is re-materialized
+    without searching (:func:`repro.deploy.engine.instantiate_plan`), so flow
+    reports on served plans are free."""
+    from .engine import instantiate_plan
+    from .request import DeployRequest
+    from .service import fetch_plan
+
+    try:
+        d = fetch_plan(src)
+    except OSError as e:
+        ap.error(f"cannot load plan from {src!r}: {e}")
+    if not isinstance(d, dict) or "request" not in d or "placement" not in d:
+        ap.error(f"{src!r} is not a cached plan (need a JSON object with "
+                 "'request' and 'placement' — a saved DeployResponse or a "
+                 "/plan/<cache_key> payload)")
+    try:
+        req = DeployRequest.from_json(d["request"])
+        return req, instantiate_plan(req, d["placement"])
+    except (TypeError, ValueError) as e:
+        ap.error(f"cannot re-materialize plan from {src!r}: {e}")
+
+
 def _write_traces(recorder, trace, chrome_trace):
     for path, writer in ((trace, recorder.write_jsonl),
                          (chrome_trace, recorder.write_chrome_trace)):
@@ -199,6 +239,11 @@ def report_main(argv=None) -> int:
     _multilevel_args(ap)
     ap.add_argument("--top-k", type=int, default=10,
                     help="hotspot links to list")
+    ap.add_argument("--plan", default=None, metavar="PATH|URL",
+                    help="flow-report a cached plan (saved DeployResponse / "
+                         "cache-entry JSON, or a server /plan/<cache_key> "
+                         "URL) instead of deploying; model/topology/search "
+                         "options are taken from the plan's own request")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the flow report dict (plus the plan report) "
                          "to PATH")
@@ -208,21 +253,29 @@ def report_main(argv=None) -> int:
                     help="write a chrome://tracing / Perfetto trace JSON")
     args = ap.parse_args(argv)
 
-    noc = _resolve_topology(ap, args, args.cores)
-    cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
     recorder = Recorder() if (args.trace or args.chrome_trace) else None
-    plan = deploy_model(cfg, noc, partition_strategy=args.strategy,
-                        method=args.method, objective=args.objective,
-                        schedule="none", seed=args.seed, budget=args.budget,
-                        backend=args.backend, recorder=recorder,
-                        **_restarts_kw(ap, args),
-                        **_multilevel_kw(ap, args, [args.method]))
+    if args.plan:
+        req, plan = _load_plan(ap, args.plan)
+        noc = plan.noc
+        model_name, method, objective = plan.model, req.method, \
+            req.objective[0]
+    else:
+        noc = _resolve_topology(ap, args, args.cores)
+        cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
+        plan = deploy_model(cfg, noc, partition_strategy=args.strategy,
+                            method=args.method, objective=args.objective,
+                            schedule="none", seed=args.seed,
+                            budget=args.budget, backend=args.backend,
+                            recorder=recorder, **_restarts_kw(ap, args),
+                            **_multilevel_kw(ap, args, [args.method]))
+        model_name, method, objective = args.model, args.method, \
+            args.objective
     rep = flow_report(noc, plan.graph, plan.placement, top_k=args.top_k)
     d = noc.describe()
     topo = f"{d.get('kind', 'grid')} {d.get('rows')}x{d.get('cols')}" \
            f" ({d.get('n_cores')} cores)"
-    print(f"deployment: {args.model} via {args.method} "
-          f"(objective={args.objective}) on {topo}")
+    print(f"deployment: {model_name} via {method} "
+          f"(objective={objective}) on {topo}")
     print(rep.render(top_k=args.top_k))
 
     if args.json:
@@ -272,6 +325,11 @@ def replay_main(argv=None) -> int:
     ap.add_argument("--compare-cold", action="store_true",
                     help="also run a from-scratch re-optimization at every "
                          "recovery and record it next to the warm result")
+    ap.add_argument("--plan", default=None, metavar="PATH|URL",
+                    help="start from a cached plan (saved DeployResponse / "
+                         "cache-entry JSON, or a server /plan/<cache_key> "
+                         "URL) instead of deploying first; the plan's own "
+                         "model and topology are used")
     ap.add_argument("--top-k", type=int, default=5,
                     help="hotspot links in the before/after flow reports")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -282,9 +340,13 @@ def replay_main(argv=None) -> int:
                     help="write a chrome://tracing / Perfetto trace JSON")
     args = ap.parse_args(argv)
 
-    noc = _resolve_topology(ap, args, args.cores)
-    cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
     recorder = Recorder() if (args.trace or args.chrome_trace) else None
+    if args.plan:
+        _, plan = _load_plan(ap, args.plan)
+        noc, cfg = plan.noc, None          # re-partitions reuse plan.profiles
+    else:
+        noc = _resolve_topology(ap, args, args.cores)
+        cfg, plan = MODELS[args.model](n_classes=10, in_res=32, T=4), None
     try:
         res = run_scenario(cfg, noc, args.scenario, method=args.method,
                            objective=args.objective,
@@ -292,7 +354,8 @@ def replay_main(argv=None) -> int:
                            migration_weight=args.migration_weight,
                            budget=args.budget, escalation=args.escalation,
                            max_retries=args.max_retries, seed=args.seed,
-                           compare_cold=args.compare_cold, recorder=recorder)
+                           compare_cold=args.compare_cold, recorder=recorder,
+                           plan=plan)
     except ValueError as e:
         ap.error(str(e))
 
@@ -355,6 +418,139 @@ def replay_main(argv=None) -> int:
     return 0
 
 
+def serve_main(argv=None) -> int:
+    """``repro-deploy serve``: run the persistent placement service."""
+    from .plancache import PlanCache
+    from .service import PlacementService, make_server
+
+    ap = argparse.ArgumentParser(
+        prog="repro-deploy serve",
+        description="Persistent placement service: POST /deploy answers "
+                    "DeployRequest JSON from the plan cache (exact hits), "
+                    "warm-starts near misses from cached placements, and "
+                    "fuses concurrent same-graph cold requests into one "
+                    "batched search dispatch. GET /stats for p50/p99 request "
+                    "latencies and hit/miss/warm counters.")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8642)
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="JSON plan-cache file: loaded at startup when it "
+                         "exists, saved on shutdown — cache hits survive "
+                         "server restarts")
+    ap.add_argument("--max-entries", type=int, default=1024,
+                    help="plan-cache capacity (LRU eviction beyond it)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="micro-batch size cap for concurrent requests")
+    ap.add_argument("--window-ms", type=float, default=10.0,
+                    help="micro-batching window: requests arriving within "
+                         "it share one dispatch")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable fused batched search (serial per-request "
+                         "searches; answers are identical by construction)")
+    ap.add_argument("--warm-budget-frac", type=float, default=0.4,
+                    help="first warm-start attempt budget as a fraction of "
+                         "the request's full budget")
+    ap.add_argument("--warm-threshold", type=float, default=0.05,
+                    help="accepted warm cost overshoot vs the donor plan "
+                         "before the budget escalates")
+    args = ap.parse_args(argv)
+
+    if args.cache and os.path.exists(args.cache):
+        cache = PlanCache.load(args.cache, max_entries=args.max_entries)
+        print(f"# loaded {len(cache)} cached plans from {args.cache}")
+    else:
+        cache = PlanCache(max_entries=args.max_entries)
+    service = PlacementService(cache=cache, fuse=not args.no_fuse,
+                               warm_budget_frac=args.warm_budget_frac,
+                               warm_threshold=args.warm_threshold)
+    server, queue = make_server(service, host=args.host, port=args.port,
+                                max_batch=args.max_batch,
+                                window_s=args.window_ms / 1e3)
+    host, port = server.server_address[:2]
+    print(f"# placement service on http://{host}:{port} "
+          "(POST /deploy, /deploy_batch; GET /stats, /healthz, /plan/<key>)")
+
+    def _terminate(signum, frame):       # SIGTERM saves the cache too
+        raise KeyboardInterrupt
+
+    import signal
+    signal.signal(signal.SIGTERM, _terminate)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("\n# shutting down")
+    finally:
+        server.server_close()
+        queue.close()
+        if args.cache:
+            service.cache.save(args.cache)
+            print(f"# saved {len(service.cache)} plans to {args.cache}")
+    return 0
+
+
+def request_main(argv=None) -> int:
+    """``repro-deploy request``: client — POST one deployment request."""
+    from .request import DeployRequest
+    from .service import request_over_http
+
+    ap = argparse.ArgumentParser(
+        prog="repro-deploy request",
+        description="Build one canonical DeployRequest and POST it to a "
+                    "running placement service; prints where the plan came "
+                    "from (hit / warm / miss) and its costs.")
+    ap.add_argument("--url", default="http://127.0.0.1:8642")
+    ap.add_argument("--model", default="spike_resnet18",
+                    choices=tuple(MODELS))
+    ap.add_argument("--method", default="simulated_annealing",
+                    help="optimize_placement method")
+    ap.add_argument("--objective", default="comm_cost",
+                    help=f"objective spec; names: {tuple(OBJECTIVES)}")
+    _add_topology_args(ap)
+    ap.add_argument("--partition", "--strategy", dest="strategy",
+                    default="auto",
+                    choices=("auto", "compute", "storage", "balanced",
+                             "chip", "chip_balanced"))
+    ap.add_argument("--schedule", default="none", choices=SCHEDULES,
+                    help="schedule stage of the returned plan (default "
+                         "none: placement-only requests cache best)")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--timeout", type=float, default=300.0,
+                    help="seconds to wait for the response")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="write the DeployResponse JSON (reusable as "
+                         "--plan for report/replay)")
+    args = ap.parse_args(argv)
+
+    noc = _resolve_topology(ap, args, args.cores)
+    cfg = MODELS[args.model](n_classes=10, in_res=32, T=4)
+    try:
+        req = DeployRequest.from_call(
+            cfg, noc, partition_strategy=args.strategy, method=args.method,
+            objective=args.objective, schedule=args.schedule,
+            budget=args.budget, seed=args.seed, backend=args.backend)
+    except (TypeError, ValueError) as e:
+        ap.error(str(e))
+    try:
+        resp = request_over_http(args.url, req, timeout=args.timeout)
+    except OSError as e:
+        ap.error(f"cannot reach placement service at {args.url}: {e}")
+    warm = f" warm_from={resp.warm_from[:12]}" if resp.warm_from else ""
+    fused = " (fused batch row)" if resp.fused else ""
+    print(f"{resp.status}{fused}{warm}: {req.describe()}")
+    print(f"cache_key={resp.cache_key}")
+    print(f"objective_cost={resp.objective_cost:.6e} "
+          f"comm_cost={resp.comm_cost:.6e} "
+          f"latency_s={resp.latency_s:.4f} attempts={resp.attempts}")
+    if args.save:
+        os.makedirs(os.path.dirname(args.save) or ".", exist_ok=True)
+        with open(args.save, "w") as f:
+            json.dump(resp.to_dict(), f, indent=2)
+        print(f"# wrote {args.save}")
+    return 0
+
+
 def main(argv=None) -> int:
     import sys
     if argv is None:
@@ -363,6 +559,10 @@ def main(argv=None) -> int:
         return report_main(argv[1:])
     if argv and argv[0] == "replay":
         return replay_main(argv[1:])
+    if argv and argv[0] == "serve":
+        return serve_main(argv[1:])
+    if argv and argv[0] == "request":
+        return request_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="repro-deploy",
         description="End-to-end SNN deployment sweep: "

@@ -313,6 +313,7 @@ def run_scenario(model, noc, scenario, *,
                  cold_budget: int | None = None,
                  warm_kw: dict | None = None,
                  recorder=None,
+                 plan=None,
                  **deploy_kw) -> ScenarioResult:
     """Deploy ``model`` on ``noc`` and replay ``scenario`` through the
     online re-placement control loop; returns a :class:`ScenarioResult`.
@@ -343,6 +344,12 @@ def run_scenario(model, noc, scenario, *,
     Control decisions read deterministic objective values and seeded RNG
     streams only, so results are bit-identical with the recorder attached or
     detached (``tests/test_runtime.py`` pins this).
+
+    ``plan`` (a :class:`repro.deploy.DeploymentPlan`) skips the initial
+    deployment and replays the scenario on an existing live plan — e.g. one
+    re-materialized from the placement service's cache
+    (:func:`repro.deploy.engine.instantiate_plan`); ``model`` may then be
+    ``None`` (re-partitions reuse the plan's profiles).
     """
     scenario = parse_scenario(scenario)
     rec = recorder if recorder is not None else NULL_RECORDER
@@ -353,10 +360,13 @@ def run_scenario(model, noc, scenario, *,
     deploy_kw.setdefault("schedule", "none")
 
     d_budget = deploy_budget if deploy_budget is not None else budget
-    with rec.span("runtime.deploy", model=getattr(model, "name", "profiled")):
-        plan = deploy_model(model, noc, method=method, objective=objective,
-                            seed=seed, budget=d_budget, recorder=recorder,
-                            **deploy_kw)
+    if plan is None:
+        with rec.span("runtime.deploy",
+                      model=getattr(model, "name", "profiled")):
+            plan = deploy_model(model, noc, method=method,
+                                objective=objective, seed=seed,
+                                budget=d_budget, recorder=recorder,
+                                **deploy_kw)
     profiles = plan.profiles
     base_graph = plan.graph                 # unperturbed logical units
     initial_graph = base_graph

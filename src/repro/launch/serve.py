@@ -6,25 +6,120 @@ once, then decoded step-locked. Greedy or temperature sampling.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --batch 4 --prompt-len 32 --gen-len 16
+
+:class:`MicroBatchQueue` is the reusable continuous-batching front itself —
+a thread-safe submit/drain queue that coalesces requests arriving within a
+window into one batch for a caller-supplied batch processor. The token
+server here and the placement service (:mod:`repro.deploy.service`) share it,
+so it stays dependency-free (stdlib threading only; jax imports below are
+deferred into the functions that need them).
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs.registry import get_config, get_smoke_config
-from ..models import lm
-from ..models.encdec import EncDecConfig
-from ..models.specs import materialize
+
+class MicroBatchQueue:
+    """Coalesce concurrent submissions into micro-batches for one worker.
+
+    ``process_batch`` is called from a single worker thread with a list of
+    submitted items and must return one result per item, in order.
+    :meth:`submit` blocks the calling thread until its item's result (or the
+    batch's exception) is ready — the continuous-batching idiom: requests
+    arriving within ``window_s`` of each other (up to ``max_batch``) share
+    one processor dispatch.
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, process_batch, max_batch: int = 8,
+                 window_s: float = 0.01):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._process = process_batch
+        self.max_batch = int(max_batch)
+        self.window_s = float(window_s)
+        self._lock = threading.Lock()
+        self._pending: list = []          # [(item, event, slot)]
+        self._wake = threading.Event()
+        self._closed = False
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def submit(self, item, timeout: float | None = None):
+        """Enqueue ``item``; block until its result is ready and return it
+        (re-raising the batch's exception if processing failed)."""
+        if self._closed:
+            raise RuntimeError("queue is closed")
+        done, slot = threading.Event(), {}
+        with self._lock:
+            self._pending.append((item, done, slot))
+        self._wake.set()
+        if not done.wait(timeout):
+            raise TimeoutError(f"no result within {timeout}s")
+        if "error" in slot:
+            raise slot["error"]
+        return slot["result"]
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the worker after the current batch; pending items still run."""
+        self._closed = True
+        self._wake.set()
+        self._worker.join(timeout)
+
+    def _run(self) -> None:
+        while True:
+            self._wake.wait()
+            with self._lock:
+                if not self._pending:
+                    if self._closed:
+                        return
+                    self._wake.clear()
+                    continue
+            # batching window: let near-simultaneous submissions pile up
+            if self.window_s > 0:
+                deadline = time.perf_counter() + self.window_s
+                while time.perf_counter() < deadline:
+                    with self._lock:
+                        if len(self._pending) >= self.max_batch:
+                            break
+                    time.sleep(min(0.001, self.window_s))
+            with self._lock:
+                batch = self._pending[:self.max_batch]
+                del self._pending[:self.max_batch]
+                if not self._pending:
+                    self._wake.clear()
+                    if self._closed:
+                        self._wake.set()   # drain remaining then exit
+            items = [it for it, _, _ in batch]
+            try:
+                results = self._process(items)
+                if len(results) != len(items):
+                    raise RuntimeError(
+                        f"process_batch returned {len(results)} results "
+                        f"for {len(items)} items")
+                for (_, done, slot), res in zip(batch, results):
+                    slot["result"] = res
+                    done.set()
+            except Exception as e:  # noqa: BLE001 — propagate to submitters
+                for _, done, slot in batch:
+                    slot["error"] = e
+                    done.set()
 
 
 def generate(params, cfg, prompts, gen_len: int, max_len: int | None = None,
              temperature: float = 0.0, seed: int = 0):
     """prompts [B, P] int32 -> tokens [B, P+gen_len]. Greedy if temperature=0."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import lm
+    from ..models.specs import materialize
+
     b, p = prompts.shape
     max_len = max_len or (p + gen_len)
     cache = materialize(jax.random.PRNGKey(0), lm.cache_specs(cfg, b, max_len))
@@ -48,6 +143,14 @@ def generate(params, cfg, prompts, gen_len: int, max_len: int | None = None,
 
 
 def main(argv=None):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs.registry import get_config, get_smoke_config
+    from ..models import lm
+    from ..models.encdec import EncDecConfig
+    from ..models.specs import materialize
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")

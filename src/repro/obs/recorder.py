@@ -137,6 +137,10 @@ class Recorder:
             return None
         return {"count": len(samples), **percentiles(samples)}
 
+    def histogram_summaries(self) -> dict:
+        """All histogram summaries at once — the service's /stats payload."""
+        return {name: self.histogram_summary(name) for name in self._hists}
+
     # ---- export -----------------------------------------------------------
     def _tail_events(self) -> list[dict]:
         """Counter totals + histogram summaries as final snapshot events, so
